@@ -1,0 +1,108 @@
+"""§Roofline table builder — reads results/dryrun/*.json (deliverable g).
+
+For each (arch × shape × mesh) cell: the three roofline terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ("useful compute" — catches
+remat/redundancy waste), bytes/device, and a one-line mitigation note.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+    PYTHONPATH=src python -m benchmarks.roofline --markdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def mitigation_note(d: Dict) -> str:
+    r = d["roofline"]
+    dom = r["dominant"]
+    if dom == "collective_s":
+        colls = d["hlo"]["collectives"]
+        worst = max(colls, key=lambda k: colls[k]["ici_bytes"]
+                    + colls[k]["dcn_bytes"]) if colls else "?"
+        if d["hlo"]["collectives"].get("all-gather", {}).get("count", 0) > 500:
+            return (f"per-chunk {worst} resharding storm — align attention/"
+                    f"cache shardings so the kv scan stays local")
+        return (f"{worst}-bound — overlap with compute / hierarchical "
+                f"schedule / shard the other operand")
+    if dom == "memory_s":
+        if d["useful_flops_ratio"] < 0.3:
+            return "low useful-FLOPs ratio — remove redundant/replicated compute first"
+        return "memory-bound — fuse, increase arithmetic intensity (bigger microbatch per device)"
+    return "compute-bound — good; push MXU utilisation (layout/fusion)"
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows: List[Dict], markdown: bool = False) -> str:
+    rows = sorted(rows, key=lambda d: (d["arch"],
+                                       SHAPE_ORDER.index(d["shape"]),
+                                       d["mesh"]))
+    out = []
+    if markdown:
+        out.append("| arch | shape | mesh | compute_s | memory_s | coll_s "
+                   "(ici/dcn) | dominant | useful | GB/dev | fits | note |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    else:
+        out.append(f"{'arch':<22}{'shape':<13}{'mesh':<7}{'compute':>10}"
+                   f"{'memory':>10}{'coll':>10}{'dom':>6}{'useful':>8}"
+                   f"{'GB/dev':>8}{'fits':>6}")
+    for d in rows:
+        if d.get("skipped"):
+            if markdown:
+                out.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — "
+                           f"| — | — | SKIP | — | — | — | {d['reason'][:60]} |")
+            else:
+                out.append(f"{d['arch']:<22}{d['shape']:<13}{d['mesh']:<7}"
+                           f"{'SKIPPED (' + d['reason'][:48] + ')':>60}")
+            continue
+        r = d["roofline"]
+        gb = d["memory_per_device"]["total_bytes"] / 1e9
+        useful = min(d["useful_flops_ratio"], 9.99)
+        if markdown:
+            out.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+                f"| {r['compute_s']*1e3:.1f} ms | {r['memory_s']*1e3:.1f} ms "
+                f"| {r['collective_s']*1e3:.1f} ms "
+                f"({r['ici_s']*1e3:.0f}/{r['dcn_s']*1e3:.0f}) "
+                f"| {r['dominant'].replace('_s','')} | {useful:.2f} "
+                f"| {gb:.1f} | {'y' if d['fits_hbm'] else 'N'} "
+                f"| {mitigation_note(d)[:80]} |")
+        else:
+            out.append(
+                f"{d['arch']:<22}{d['shape']:<13}{d['mesh']:<7}"
+                f"{r['compute_s']*1e3:>9.1f}m{r['memory_s']*1e3:>9.1f}m"
+                f"{r['collective_s']*1e3:>9.1f}m"
+                f"{r['dominant'].replace('_s',''):>6}{useful:>8.2f}"
+                f"{gb:>8.1f}{'y' if d['fits_hbm'] else 'N':>6}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run results under {args.dir}; run "
+              f"`python -m repro.launch.dryrun --all --mesh both` first")
+        return 1
+    print(table(rows, markdown=args.markdown))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

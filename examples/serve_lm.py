@@ -1,0 +1,58 @@
+"""Serving example: continuous batching with the paper's EFT request rule.
+
+Submits a bursty trace of requests to the engine under three admission
+policies and compares latency — the paper's scheduling claim (EFT beats
+naive ordering) shows up at the request level too.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def trace(cfg, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # bimodal: many short chats + a few long generations
+        long = rng.random() < 0.25
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(2, cfg.vocab_size,
+                                size=int(rng.integers(4, 16))).astype(np.int32),
+            max_new_tokens=int(rng.integers(24, 48)) if long
+            else int(rng.integers(2, 8)),
+            arrival=float(i // 4) * 2.0))        # bursts of 4
+    return reqs
+
+
+def main() -> None:
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: vocab {cfg.vocab_size}, "
+          f"{cfg.n_layers}L×{cfg.d_model}")
+    results = {}
+    for policy in ("fcfs", "eft", "edf"):
+        eng = ServeEngine(cfg, params,
+                          EngineConfig(max_batch=4, max_seq=96,
+                                       policy=policy))
+        for r in trace(cfg):
+            eng.submit(r)
+        done = eng.run()
+        st = eng.latency_stats()
+        results[policy] = st
+        print(f"{policy:<5} finished {len(done):>3}  "
+              f"mean latency {st['mean_latency']:7.1f}  "
+              f"p95 {st['p95_latency']:7.1f}  wait {st['mean_wait']:6.1f}")
+    assert results["eft"]["mean_latency"] <= results["fcfs"]["mean_latency"] * 1.05
+    print("serve_lm OK (EFT ≤ FCFS mean latency)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — JITA-4DS on JAX/TPU: disaggregated DS-pipeline execution."""
+__version__ = "1.0.0"

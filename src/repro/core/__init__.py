@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: JITA-4DS cross-layer management.
+
+Composable Virtual Data Centres (VDCs), the DAG pipeline runtime, the
+hierarchical edge/DC resource pool, the EFT/ETF/RR (+HEFT/MinMin/VoS)
+schedulers, the Value-of-Service metric, the discrete-event emulation, and
+the elastic resource manager.
+"""
+
+from repro.core.dag import PipelineDAG, Task, merge
+from repro.core.resources import (BACKEND, FRONTEND, Link, ProcessingElement,
+                                  ResourcePool, paper_pool, tpu_pool)
+from repro.core.cost_model import (CostModel, LearnedCostModel, RooflineTerms,
+                                   roofline_time)
+from repro.core.schedulers import (POLICIES, SCHEDULERS, Assignment, Schedule,
+                                   schedule)
+from repro.core.vos import VoSSpec, system_vos, uniform_specs
+from repro.core import simulator
+
+__all__ = [
+    "PipelineDAG", "Task", "merge",
+    "BACKEND", "FRONTEND", "Link", "ProcessingElement", "ResourcePool",
+    "paper_pool", "tpu_pool",
+    "CostModel", "LearnedCostModel", "RooflineTerms", "roofline_time",
+    "POLICIES", "SCHEDULERS", "Assignment", "Schedule", "schedule",
+    "VoSSpec", "system_vos", "uniform_specs", "simulator",
+]

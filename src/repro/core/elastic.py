@@ -1,0 +1,174 @@
+"""Elastic scaling, failure handling, straggler mitigation (JITA-4DS
+"continuous provisioning and re-provisioning of DC resources").
+
+Three mechanisms, sized for 1000+ node deployments:
+
+  * :func:`reshard` — move a live pytree onto a different mesh/sharding
+    (elastic scale up/down without a checkpoint round-trip). All-gather +
+    re-place semantics; at scale this lowers to XLA resharding collectives.
+  * :class:`HealthMonitor` — per-worker step-time EWMA; flags stragglers
+    (> ``threshold`` × fleet median) and dead workers (missed heartbeats).
+    The trainer consults it every step; mitigation = drop/replace the slow
+    worker and re-mesh (the backup-task pattern, MapReduce-style, applied
+    to synchronous data parallelism).
+  * :class:`ElasticPlan` — given a pool size and a failure report, choose
+    the next mesh shape (largest (data × model) grid that fits the healthy
+    worker count while keeping the model axis intact).
+
+The discrete-event side (failure *injection*, restart cost accounting) is
+in repro.train.fault_tolerance; this module is the decision logic, kept
+pure for property testing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Live resharding
+# ---------------------------------------------------------------------------
+
+def reshard(tree, new_mesh: Mesh, spec_fn) -> object:
+    """Re-place every leaf of ``tree`` onto ``new_mesh``.
+
+    ``spec_fn(path_leaf) -> PartitionSpec`` maps each leaf to its spec on
+    the new mesh (normally repro.distributed.sharding rules). Works across
+    different device counts — the elastic scale-up/down primitive.
+    """
+    def _move(leaf):
+        spec = spec_fn(leaf)
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+    return jax.tree_util.tree_map(_move, tree)
+
+
+# ---------------------------------------------------------------------------
+# Health monitoring / straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerHealth:
+    worker: str
+    ewma_step_s: float = 0.0
+    last_heartbeat: float = 0.0
+    steps: int = 0
+    alive: bool = True
+
+
+class HealthMonitor:
+    """Tracks per-worker step times + heartbeats; flags stragglers/failures.
+
+    Straggler rule (Dean's tail-at-scale guidance): a worker whose EWMA
+    step time exceeds ``threshold`` × fleet median for ≥ ``patience``
+    consecutive observations. Dead rule: no heartbeat for
+    ``heartbeat_timeout`` seconds.
+    """
+
+    def __init__(self, workers: Sequence[str], alpha: float = 0.3,
+                 threshold: float = 1.5, patience: int = 3,
+                 heartbeat_timeout: float = 60.0) -> None:
+        self.health: Dict[str, WorkerHealth] = {
+            w: WorkerHealth(w) for w in workers}
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.heartbeat_timeout = heartbeat_timeout
+        self._strikes: Dict[str, int] = {w: 0 for w in workers}
+
+    def observe(self, worker: str, step_s: float, now: float) -> None:
+        h = self.health[worker]
+        h.ewma_step_s = (step_s if h.steps == 0
+                         else self.alpha * step_s + (1 - self.alpha) * h.ewma_step_s)
+        h.steps += 1
+        h.last_heartbeat = now
+
+    def heartbeat(self, worker: str, now: float) -> None:
+        self.health[worker].last_heartbeat = now
+
+    def _median(self) -> float:
+        ts = [h.ewma_step_s for h in self.health.values()
+              if h.alive and h.steps > 0]
+        return float(np.median(ts)) if ts else 0.0
+
+    def stragglers(self) -> List[str]:
+        med = self._median()
+        if med <= 0:
+            return []
+        out = []
+        for w, h in self.health.items():
+            if not h.alive or h.steps == 0:
+                continue
+            if h.ewma_step_s > self.threshold * med:
+                self._strikes[w] += 1
+            else:
+                self._strikes[w] = 0
+            if self._strikes[w] >= self.patience:
+                out.append(w)
+        return out
+
+    def dead(self, now: float) -> List[str]:
+        return [w for w, h in self.health.items()
+                if h.alive and now - h.last_heartbeat > self.heartbeat_timeout]
+
+    def mark_dead(self, worker: str) -> None:
+        self.health[worker].alive = False
+
+    def healthy(self) -> List[str]:
+        return [w for w, h in self.health.items() if h.alive]
+
+
+# ---------------------------------------------------------------------------
+# Elastic planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Next mesh decision after a capacity change."""
+
+    mesh_shape: Dict[str, int]
+    dropped: Tuple[str, ...]
+    action: str  # "keep" | "shrink" | "grow"
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(list(self.mesh_shape.values())))
+
+
+def plan_remesh(healthy_devices: int, model_axis: int,
+                current_data_axis: int,
+                allow_grow: bool = True) -> ElasticPlan:
+    """Choose the next (data, model) grid for ``healthy_devices``.
+
+    The model axis is load-bearing (weights are sharded over it) so it is
+    preserved; the data axis shrinks/grows to the largest multiple that
+    fits. Requires healthy_devices >= model_axis (else the job must restart
+    from checkpoint on a smaller model axis — caller's decision).
+    """
+    if healthy_devices < model_axis:
+        raise ValueError(
+            f"only {healthy_devices} healthy devices < model axis "
+            f"{model_axis}; restart from checkpoint with a smaller mesh")
+    data = max(healthy_devices // model_axis, 1)
+    if not allow_grow:
+        data = min(data, current_data_axis)
+    action = ("keep" if data == current_data_axis
+              else "shrink" if data < current_data_axis else "grow")
+    return ElasticPlan({"data": data, "model": model_axis}, (), action)
+
+
+def rebalance_batch(global_batch: int, data_axis: int) -> Tuple[int, int]:
+    """Per-replica batch + padding after an elastic re-mesh.
+
+    Keeps the *global* batch (and thus the loss scale / LR schedule)
+    constant across re-meshes by padding to the next multiple; returns
+    (per_replica, padded_global).
+    """
+    per = -(-global_batch // data_axis)  # ceil
+    return per, per * data_axis

@@ -1,0 +1,211 @@
+"""Hierarchical resource pool (paper §4.1).
+
+The paper models a two-layer pool: a *frontend* of low-power edge PEs (ARM
+cores, an Nvidia Volta GPU) and a *backend* of DC PEs (Xeon cores, a Tesla
+V100, a Xilinx Alveo FPGA), joined by a slow link (12 Mbps in the paper's
+experiments). A :class:`ProcessingElement` is anything the workload manager
+can place a task on; a :class:`ResourcePool` is the set of PEs plus the
+:class:`Link` matrix between *locations*.
+
+TPU adaptation: PEs are either host-CPU cores (the "edge" of a pod worker)
+or TPU mesh slices of various sizes (the "VDC" building blocks). The same
+scheduler mathematics applies — only throughput tables and link bandwidths
+change (see repro.core.cost_model.tpu_pool / paper_pool).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+FRONTEND = "frontend"
+BACKEND = "backend"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessingElement:
+    """One schedulable compute resource.
+
+    Attributes:
+      name: unique id, e.g. ``"arm0"`` / ``"xeon2"`` / ``"tpu_slice_4x4"``.
+      kind: device family key into the cost model's throughput table
+        (``"arm"``, ``"volta"``, ``"xeon"``, ``"v100"``, ``"alveo"``,
+        ``"host_cpu"``, ``"tpu"``).
+      location: ``"frontend"`` (edge) or ``"backend"`` (DC) — or a pod name
+        such as ``"pod0"`` for multi-pod TPU pools.
+      speed: relative throughput multiplier on top of the kind's base rate.
+      power_busy / power_idle: Watts, for the energy term of VoS.
+      chips: number of chips aggregated by this PE (mesh slices > 1).
+    """
+
+    name: str
+    kind: str
+    location: str = BACKEND
+    speed: float = 1.0
+    power_busy: float = 100.0
+    power_idle: float = 10.0
+    chips: int = 1
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.name}({self.kind}@{self.location})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """Directed link between two locations.
+
+    ``bandwidth`` is bytes/second, ``latency`` seconds. The paper charges
+    12 Mbps (1.5e6 B/s) between edge and DC; intra-location transfers are
+    free (same memory space / rack-local).
+    """
+
+    src: str
+    dst: str
+    bandwidth: float
+    latency: float = 0.0
+
+    def transfer_time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.latency + nbytes / self.bandwidth
+
+
+class ResourcePool:
+    """A set of PEs + location-to-location links (one JITA-4DS VDC view)."""
+
+    def __init__(self, pes: Sequence[ProcessingElement],
+                 links: Sequence[Link] = (),
+                 intra_location_bandwidth: float = float("inf")) -> None:
+        names = [p.name for p in pes]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate PE names")
+        self.pes: List[ProcessingElement] = list(pes)
+        self._by_name = {p.name: p for p in pes}
+        self._links: Dict[Tuple[str, str], Link] = {}
+        for l in links:
+            self._links[(l.src, l.dst)] = l
+        self.intra_location_bandwidth = intra_location_bandwidth
+
+    # -- lookups --------------------------------------------------------------
+    def pe(self, name: str) -> ProcessingElement:
+        return self._by_name[name]
+
+    def by_location(self, location: str) -> List[ProcessingElement]:
+        return [p for p in self.pes if p.location == location]
+
+    def by_kind(self, kind: str) -> List[ProcessingElement]:
+        return [p for p in self.pes if p.kind == kind]
+
+    @property
+    def locations(self) -> List[str]:
+        seen: List[str] = []
+        for p in self.pes:
+            if p.location not in seen:
+                seen.append(p.location)
+        return seen
+
+    def link(self, src: str, dst: str) -> Optional[Link]:
+        if src == dst:
+            return None
+        return self._links.get((src, dst))
+
+    def transfer_time(self, src: str, dst: str, nbytes: float) -> float:
+        """Seconds to move ``nbytes`` from location src to dst."""
+        if nbytes <= 0:
+            return 0.0
+        if src == dst:
+            if self.intra_location_bandwidth == float("inf"):
+                return 0.0
+            return nbytes / self.intra_location_bandwidth
+        l = self.link(src, dst)
+        if l is None:
+            raise KeyError(f"no link {src!r}->{dst!r}")
+        return l.transfer_time(nbytes)
+
+    # -- composition ----------------------------------------------------------
+    def subset(self, names: Iterable[str]) -> "ResourcePool":
+        keep = set(names)
+        return ResourcePool([p for p in self.pes if p.name in keep],
+                            list(self._links.values()),
+                            self.intra_location_bandwidth)
+
+    def union(self, other: "ResourcePool") -> "ResourcePool":
+        links = {**self._links, **other._links}
+        return ResourcePool(self.pes + other.pes, list(links.values()),
+                            min(self.intra_location_bandwidth,
+                                other.intra_location_bandwidth))
+
+    def __len__(self) -> int:
+        return len(self.pes)
+
+    def describe(self) -> str:
+        parts = []
+        for loc in self.locations:
+            kinds = [p.kind for p in self.by_location(loc)]
+            counts = {k: kinds.count(k) for k in dict.fromkeys(kinds)}
+            parts.append(f"{loc}[" + ",".join(f"{v}x{k}" for k, v in counts.items()) + "]")
+        return "+".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Pool factories
+# ---------------------------------------------------------------------------
+
+def paper_pool(n_arm: int = 3, n_volta: int = 1, n_xeon: int = 3,
+               n_v100: int = 1, n_alveo: int = 1,
+               edge_link_bps: float = 12e6 / 8) -> ResourcePool:
+    """The paper's hierarchical pool (Fig. 4).
+
+    Defaults are the optimal configuration found by the paper's experiment 1:
+    3 ARM + 1 Volta on the frontend, 3 Xeon + 1 V100 + 1 Alveo on the
+    backend, with a 12 Mbps (= 1.5e6 B/s) edge↔DC channel [paper §4.2,
+    citing an average 4G LTE data rate].
+    Power numbers are public TDP-class constants (ARM A72 ~5 W, Volta ~30 W
+    for Jetson-class, Xeon ~150 W, V100 ~300 W, Alveo ~100 W).
+    """
+    pes: List[ProcessingElement] = []
+    for i in range(n_arm):
+        pes.append(ProcessingElement(f"arm{i}", "arm", FRONTEND, power_busy=5, power_idle=1))
+    for i in range(n_volta):
+        pes.append(ProcessingElement(f"volta{i}", "volta", FRONTEND, power_busy=30, power_idle=5))
+    for i in range(n_xeon):
+        pes.append(ProcessingElement(f"xeon{i}", "xeon", BACKEND, power_busy=150, power_idle=30))
+    for i in range(n_v100):
+        pes.append(ProcessingElement(f"v100_{i}", "v100", BACKEND, power_busy=300, power_idle=50))
+    for i in range(n_alveo):
+        pes.append(ProcessingElement(f"alveo{i}", "alveo", BACKEND, power_busy=100, power_idle=20))
+    links = [
+        Link(FRONTEND, BACKEND, edge_link_bps),
+        Link(BACKEND, FRONTEND, edge_link_bps),
+    ]
+    return ResourcePool(pes, links)
+
+
+def tpu_pool(n_host_cores: int = 8, slice_sizes: Sequence[int] = (4, 16, 64, 256),
+             pods: int = 1,
+             pcie_bw: float = 16e9, dcn_bw: float = 25e9) -> ResourcePool:
+    """TPU-native hierarchical pool: host CPUs ("edge") + mesh slices ("VDC").
+
+    Each slice PE aggregates ``chips`` v5e chips; the scheduler prices
+    host↔device traffic at PCIe bandwidth and pod↔pod traffic at DCN
+    bandwidth — the same structure as the paper's 12 Mbps edge link, three
+    orders of magnitude up.
+    """
+    pes: List[ProcessingElement] = []
+    for i in range(n_host_cores):
+        pes.append(ProcessingElement(
+            f"host{i}", "host_cpu", FRONTEND, power_busy=15, power_idle=3))
+    links: List[Link] = []
+    for pod in range(pods):
+        loc = f"pod{pod}"
+        for s in slice_sizes:
+            pes.append(ProcessingElement(
+                f"tpu_p{pod}_s{s}", "tpu", loc, speed=float(s),
+                power_busy=200.0 * s, power_idle=40.0 * s, chips=s))
+        links.append(Link(FRONTEND, loc, pcie_bw))
+        links.append(Link(loc, FRONTEND, pcie_bw))
+        for other in range(pods):
+            if other != pod:
+                links.append(Link(loc, f"pod{other}", dcn_bw))
+    return ResourcePool(pes, links)

@@ -1,0 +1,174 @@
+"""Virtual Data Centers — JIT mesh composition (paper §3).
+
+"JITA-4DS can build a VDC that can meet the application SLO, such as
+execution performance and energy consumption ... The selected VDC, then, is
+mapped to a set of heterogeneous computing nodes."
+
+TPU-native realisation (DESIGN.md §2): a VDC is a **submesh carved out of
+the device pool just-in-time** for one workload. The :class:`VDCManager`
+owns the pool (``jax.devices()`` — 1 CPU here, 256/512 host-platform
+devices in the dry-run, real chips on a pod), composes
+:class:`VirtualDataCenter` instances on demand, tracks allocation, and
+releases blocks back when a pipeline finishes — the paper's "dynamically
+and automatically assembled and re-assembled" building blocks.
+
+Sizing uses the same VoS-style trade-off as the schedulers: pick the
+smallest slice whose predicted step time meets the SLO deadline (predicted
+via the analytic roofline in repro.core.cost_model), weighing energy
+(chips × TDP) against value.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.cost_model import (TPU_PEAK_FLOPS, TPU_HBM_BW, RooflineTerms,
+                                   roofline_time)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Service-level objective for one pipeline (paper: performance,
+    availability, energy)."""
+
+    step_deadline_s: Optional[float] = None   # max seconds per train/serve step
+    energy_budget_w: Optional[float] = None   # max sustained Watts
+    min_availability: float = 0.0             # fraction of spare capacity kept
+
+
+@dataclasses.dataclass
+class VirtualDataCenter:
+    """One composed VDC: a named mesh over an exclusive device subset."""
+
+    name: str
+    mesh: jax.sharding.Mesh
+    devices: Tuple[object, ...]
+    slo: SLO
+    predicted: Optional[RooflineTerms] = None
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.devices)
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def __enter__(self):
+        return self.mesh.__enter__()
+
+    def __exit__(self, *exc):
+        return self.mesh.__exit__(*exc)
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class VDCManager:
+    """Owns the device pool; composes/releases/resizes VDCs."""
+
+    #: per-chip sustained power (W) for the energy term of the SLO check
+    CHIP_POWER_W = 200.0
+
+    def __init__(self, devices: Optional[Sequence[object]] = None) -> None:
+        self._pool: List[object] = list(devices if devices is not None
+                                        else jax.devices())
+        self._free: List[object] = list(self._pool)
+        self._vdcs: Dict[str, VirtualDataCenter] = {}
+
+    # -- introspection ----------------------------------------------------------
+    @property
+    def total_chips(self) -> int:
+        return len(self._pool)
+
+    @property
+    def free_chips(self) -> int:
+        return len(self._free)
+
+    def vdc(self, name: str) -> VirtualDataCenter:
+        return self._vdcs[name]
+
+    @property
+    def vdcs(self) -> List[VirtualDataCenter]:
+        return list(self._vdcs.values())
+
+    # -- sizing -------------------------------------------------------------------
+    def size_for_slo(self, slo: SLO, step_flops: float, step_hbm_bytes: float,
+                     coll_bytes_per_chip: float = 0.0,
+                     candidates: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128,
+                                                  256, 512)) -> Tuple[int, RooflineTerms]:
+        """Smallest chip count whose roofline step time meets the deadline
+        and whose power fits the energy budget (paper's VoS trade-off)."""
+        best: Optional[Tuple[int, RooflineTerms]] = None
+        for c in candidates:
+            if c > self.free_chips:
+                break
+            terms = roofline_time(step_flops, step_hbm_bytes,
+                                  coll_bytes_per_chip, chips=c)
+            ok_t = (slo.step_deadline_s is None
+                    or terms.step_time <= slo.step_deadline_s)
+            ok_e = (slo.energy_budget_w is None
+                    or c * self.CHIP_POWER_W <= slo.energy_budget_w)
+            if not ok_e:
+                break  # more chips only raises power
+            best = (c, terms)
+            if ok_t:
+                return c, terms
+        if best is None:
+            raise AllocationError("no candidate size fits the free pool")
+        return best  # deadline-infeasible: return largest tried (best effort)
+
+    # -- composition ----------------------------------------------------------------
+    def compose(self, name: str, axis_shape: Mapping[str, int],
+                slo: Optional[SLO] = None,
+                predicted: Optional[RooflineTerms] = None) -> VirtualDataCenter:
+        """Carve a mesh of ``axis_shape`` (e.g. {"data": 4, "model": 2})."""
+        if name in self._vdcs:
+            raise AllocationError(f"VDC {name!r} already exists")
+        n = int(np.prod(list(axis_shape.values())))
+        avail = len(self._free)
+        slo = slo or SLO()
+        reserve = int(math.ceil(self.total_chips * slo.min_availability))
+        if n > avail - max(0, reserve - (self.total_chips - avail)):
+            raise AllocationError(
+                f"need {n} chips, only {avail} free "
+                f"(availability reserve {reserve})")
+        take, self._free = self._free[:n], self._free[n:]
+        dev_arr = np.array(take, dtype=object).reshape(tuple(axis_shape.values()))
+        mesh = jax.sharding.Mesh(dev_arr, tuple(axis_shape.keys()))
+        vdc = VirtualDataCenter(name, mesh, tuple(take), slo, predicted)
+        self._vdcs[name] = vdc
+        return vdc
+
+    def compose_for_job(self, name: str, step_flops: float,
+                        step_hbm_bytes: float, slo: SLO,
+                        model_axis: int = 1) -> VirtualDataCenter:
+        """SLO-driven composition: size via roofline, shape (data, model)."""
+        chips, terms = self.size_for_slo(slo, step_flops, step_hbm_bytes)
+        chips = max(chips, model_axis)
+        data = max(chips // model_axis, 1)
+        return self.compose(name, {"data": data, "model": model_axis},
+                            slo=slo, predicted=terms)
+
+    def release(self, name: str) -> None:
+        vdc = self._vdcs.pop(name)
+        self._free.extend(vdc.devices)
+
+    def resize(self, name: str, axis_shape: Mapping[str, int]
+               ) -> VirtualDataCenter:
+        """Re-mesh a VDC to a new shape (elastic scale up/down).
+
+        Releases then re-composes; the caller reshards live state via
+        repro.core.elastic.reshard (checkpoint-free when both meshes are
+        up, checkpoint-based across failures).
+        """
+        slo = self._vdcs[name].slo
+        self.release(name)
+        return self.compose(name, axis_shape, slo=slo)

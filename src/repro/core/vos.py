@@ -1,0 +1,83 @@
+"""Value-of-Service (VoS) metric (paper §3, §4.2.3; refs [20–23]).
+
+JITA-4DS assigns resources to VDCs so as to maximise a *time-dependent*
+system-wide value: each pipeline (or pipeline instance) earns a value that
+decays with completion time and is discounted by the energy consumed. The
+paper defers the full study to its companion report [12]; here we implement
+the standard value-curve family from its cited scheduler line of work
+(Machovec et al. / Kumbhare et al.): a flat region until a *soft* deadline,
+linear decay to zero at a *hard* deadline, plus an energy-weighted variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional
+
+from repro.core.schedulers import Schedule
+
+
+def step_value(finish: float, deadline: float, value: float = 1.0) -> float:
+    """All-or-nothing deadline value."""
+    return value if finish <= deadline else 0.0
+
+
+def linear_decay(finish: float, soft: float, hard: float,
+                 value: float = 1.0) -> float:
+    """Flat until ``soft``, linearly decaying to 0 at ``hard``."""
+    if finish <= soft:
+        return value
+    if finish >= hard:
+        return 0.0
+    return value * (hard - finish) / (hard - soft)
+
+
+def exponential_decay(finish: float, tau: float, value: float = 1.0) -> float:
+    import math
+    return value * math.exp(-finish / max(tau, 1e-12))
+
+
+@dataclasses.dataclass(frozen=True)
+class VoSSpec:
+    """Per-pipeline value specification."""
+
+    soft_deadline: float
+    hard_deadline: float
+    value: float = 1.0
+    energy_weight: float = 0.0  # value lost per Joule
+
+    def of(self, finish: float, energy: float = 0.0) -> float:
+        v = linear_decay(finish, self.soft_deadline, self.hard_deadline, self.value)
+        return v - self.energy_weight * energy
+
+
+def system_vos(schedule: Schedule, specs: Dict[str, VoSSpec],
+               instance_of: Optional[Dict[str, str]] = None) -> float:
+    """System-wide VoS of a schedule.
+
+    ``specs`` maps pipeline-instance id → :class:`VoSSpec`; ``instance_of``
+    maps task name → instance id (defaults to the ``name#idx`` convention of
+    :meth:`repro.core.dag.PipelineDAG.instance`).
+    """
+    # completion time and energy per instance
+    finish: Dict[str, float] = {}
+    energy: Dict[str, float] = {}
+    for a in schedule.assignments:
+        inst = (instance_of or {}).get(a.task)
+        if inst is None:
+            inst = a.task.split("#", 1)[1] if "#" in a.task else "0"
+        finish[inst] = max(finish.get(inst, 0.0), a.finish)
+        energy[inst] = energy.get(inst, 0.0) + a.energy
+    total = 0.0
+    for inst, f in finish.items():
+        spec = specs.get(inst)
+        if spec is None:
+            continue
+        total += spec.of(f, energy.get(inst, 0.0))
+    return total
+
+
+def uniform_specs(n_instances: int, soft: float, hard: float,
+                  value: float = 1.0, energy_weight: float = 0.0) -> Dict[str, VoSSpec]:
+    return {str(i): VoSSpec(soft, hard, value, energy_weight)
+            for i in range(n_instances)}

@@ -1,0 +1,12 @@
+"""repro.data — streams, buffers, stores, and service plumbing (paper §3.1–3.2)."""
+
+from repro.data.streams import StreamBatch, NeubotStream, synthetic_stream
+from repro.data.buffer import BufferManager
+from repro.data.stores import TimeSeriesStore, KVStore
+from repro.data.fetch_sink import Fetch, HistoricFetch, Sink, StreamService, MessageBroker
+
+__all__ = [
+    "StreamBatch", "NeubotStream", "synthetic_stream",
+    "BufferManager", "TimeSeriesStore", "KVStore",
+    "Fetch", "HistoricFetch", "Sink", "StreamService", "MessageBroker",
+]

@@ -1,0 +1,115 @@
+"""BufferManager — bounded in-RAM buffer with spill (paper §3.1).
+
+"Since RAM assigned to a service might be limited, and in consequence its
+buffer, every service implements a data management strategy by
+collaborating with the communication middleware and with the VDC storage
+services to exploit buffer space, avoiding losing data, and processing and
+generating results on time."
+
+The BufferManager keeps the newest tuples in RAM up to ``capacity_bytes``;
+when full it *spills* the oldest block to a backing store (edge- or
+VDC-resident, see repro.data.stores) instead of dropping it. Reads
+transparently merge spilled history with the RAM tail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.streams import StreamBatch
+from repro.data.stores import TimeSeriesStore
+
+
+@dataclasses.dataclass
+class BufferStats:
+    appended_rows: int = 0
+    spilled_rows: int = 0
+    spilled_blocks: int = 0
+    dropped_rows: int = 0
+
+
+class BufferManager:
+    """Bounded buffer with oldest-first spill to a TimeSeriesStore."""
+
+    def __init__(self, capacity_bytes: int,
+                 spill_store: Optional[TimeSeriesStore] = None,
+                 series: str = "buffer_spill") -> None:
+        if capacity_bytes <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity_bytes = capacity_bytes
+        self.spill_store = spill_store
+        self.series = series
+        self._blocks: List[StreamBatch] = []
+        self._bytes = 0
+        self.stats = BufferStats()
+
+    # -- write path ------------------------------------------------------------
+    def append(self, batch: StreamBatch) -> None:
+        self._blocks.append(batch)
+        self._bytes += batch.nbytes
+        self.stats.appended_rows += len(batch)
+        self._enforce()
+
+    def _enforce(self) -> None:
+        while self._bytes > self.capacity_bytes and self._blocks:
+            oldest = self._blocks[0]
+            if len(self._blocks) == 1 and oldest.nbytes > self.capacity_bytes:
+                # single oversized block: spill a prefix, keep the tail
+                keep_rows = max(1, int(len(oldest) * self.capacity_bytes
+                                       / max(oldest.nbytes, 1)))
+                head, tail = oldest.slice(0, len(oldest) - keep_rows), \
+                    oldest.slice(len(oldest) - keep_rows, len(oldest))
+                if len(head) == 0:
+                    break
+                self._spill(head)
+                self._blocks[0] = tail
+                self._bytes = sum(b.nbytes for b in self._blocks)
+                continue
+            self._blocks.pop(0)
+            self._bytes -= oldest.nbytes
+            self._spill(oldest)
+
+    def _spill(self, batch: StreamBatch) -> None:
+        if self.spill_store is not None:
+            self.spill_store.write(self.series, batch)
+            self.stats.spilled_rows += len(batch)
+            self.stats.spilled_blocks += 1
+        else:
+            self.stats.dropped_rows += len(batch)
+
+    # -- read path ---------------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def resident(self) -> Optional[StreamBatch]:
+        """Concatenated RAM-resident tuples (newest history)."""
+        if not self._blocks:
+            return None
+        out = self._blocks[0]
+        for b in self._blocks[1:]:
+            out = out.concat(b)
+        return out
+
+    def read_range(self, t_start: float, t_end: float) -> Optional[StreamBatch]:
+        """Tuples in [t_start, t_end), merging spilled history + RAM tail."""
+        parts: List[StreamBatch] = []
+        if self.spill_store is not None:
+            hist = self.spill_store.query(self.series, t_start, t_end)
+            if hist is not None and len(hist):
+                parts.append(hist)
+        res = self.resident()
+        if res is not None and len(res):
+            lo = int(np.searchsorted(res.ts, t_start, side="left"))
+            hi = int(np.searchsorted(res.ts, t_end, side="left"))
+            if hi > lo:
+                parts.append(res.slice(lo, hi))
+        if not parts:
+            return None
+        out = parts[0]
+        for p in parts[1:]:
+            out = out.concat(p)
+        return out

@@ -1,0 +1,8 @@
+"""repro.distributed — sharding rules and collective schedules."""
+
+from repro.distributed.sharding import (logical_axis_rules, constrain,
+                                        resolve, strategy_for, param_specs,
+                                        current_rules)
+
+__all__ = ["logical_axis_rules", "constrain", "resolve", "strategy_for",
+           "param_specs", "current_rules"]

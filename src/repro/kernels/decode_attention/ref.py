@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token KV-cache attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid: Optional[jax.Array] = None, *,
+                         softcap: float = 0.0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, D) · k,v: (B, C, Hkv, D) · valid: (B, C) bool →
+    (B, Hq, D). GQA grouping: query head h reads kv head h // (Hq//Hkv)."""
+    B, Hq, D = q.shape
+    C, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, kf)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if valid is not None:
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

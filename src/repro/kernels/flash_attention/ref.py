@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materialises the full (S, S) score matrix — O(S²) memory, tractable only
+at test scale, which is exactly its job: the kernel must match this
+bit-for-bit (up to f32 accumulation order) across the test shape sweep.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q,k,v: (B, H, S, D) → (B, H, S, D). f32 softmax, output in q.dtype."""
+    B, H, S, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the k-means assignment kernel (padding + dispatch)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans.kmeans import kmeans_assign_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(x: jax.Array, cent: jax.Array, *, block_n: int = 512,
+                  interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """x: (N, D) · cent: (K, D) → (assign (N,) int32, min_d2 (N,) f32)."""
+    N, D = x.shape
+    K = cent.shape[0]
+    bn = min(block_n, max(8, N))
+    pad_n = (-N) % bn
+    pad_d = (-D) % 128
+    pad_k = (-K) % 8
+    xp = jnp.pad(x, [(0, pad_n), (0, pad_d)])
+    cp = jnp.pad(cent, [(0, pad_k), (0, pad_d)])
+    assign, d2 = kmeans_assign_kernel(xp, cp, k_real=K, block_n=bn,
+                                      interpret=interpret)
+    return assign[:N], d2[:N]

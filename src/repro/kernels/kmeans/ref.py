@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the k-means assignment kernel."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x: jax.Array, cent: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """x: (N, D) · cent: (K, D) → (assign (N,) int32, min_d2 (N,) f32)."""
+    d2 = ((x[:, None, :].astype(jnp.float32)
+           - cent[None, :, :].astype(jnp.float32)) ** 2).sum(-1)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return assign, jnp.min(d2, axis=1)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the sliding-window aggregation kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_agg.window_agg import window_agg_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "agg", "block_s",
+                                             "interpret"))
+def window_agg(x: jax.Array, *, window: int, agg: str = "mean",
+               block_s: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (S, C) → (S, C): causal sliding-window aggregate, kernel-tiled."""
+    S, C = x.shape
+    w = max(1, min(window, S))
+    bs = min(block_s, max(8, S))
+    bs = max(bs, w)                     # kernel precondition: w ≤ block
+    pad_s = (-S) % bs
+    pad_c = (-C) % 128
+    xp = jnp.pad(x, [(0, pad_s), (0, pad_c)])
+    out = window_agg_kernel(xp, window=w, agg=agg, block_s=bs,
+                            interpret=interpret)
+    return out[:S, :C]

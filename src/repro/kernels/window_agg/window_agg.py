@@ -1,0 +1,86 @@
+"""Sliding-window aggregation — Pallas TPU kernel.
+
+The hot loop of the paper's streaming services (window_agg / anomaly /
+summarize over tuple streams, §3.1). Memory-bound: each input row is read
+O(1) times, not O(window):
+
+  * **sum/mean** — per-block inclusive cumulative sum plus the *previous*
+    block mapped in as a second view of the same operand (overlapping
+    BlockSpec index_map) → out[t] = cum[t] − cum[t−w], all in VMEM.
+  * **max** — w shifted maxima over the [prev ‖ cur] concatenation
+    (w ≤ block_s; the wrapper enforces/falls back).
+
+Grid: one step per sequence block; channel dim rides whole (streams are
+narrow: a handful of float columns per the paper's tuple model).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prev_ref, cur_ref, o_ref, *, window: int, agg: str,
+            block_s: int):
+    i = pl.program_id(0)
+    prev = prev_ref[...].astype(jnp.float32)    # (bs, C) block i-1 (or junk at i=0)
+    cur = cur_ref[...].astype(jnp.float32)      # (bs, C) block i
+    prev = jnp.where(i > 0, prev, 0.0 if agg != "max" else -jnp.inf)
+    both = jnp.concatenate([prev, cur], axis=0)  # (2bs, C)
+
+    if agg in ("sum", "mean"):
+        cum = jnp.cumsum(both, axis=0)
+        hi = cum[block_s:]                       # inclusive cum at cur rows
+        # exclusive cum w rows back, clamped into the 2-block span
+        t_global = i * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (block_s,), 0)
+        lo_global = jnp.maximum(t_global - window + 1, 0)
+        lo_local = lo_global - (i - 1) * block_s  # index into `both`
+        lo_local = jnp.clip(lo_local, 0, 2 * block_s - 1)
+        zero = jnp.zeros((1, both.shape[1]), jnp.float32)
+        cum_ex = jnp.concatenate([zero, cum], axis=0)  # cum_ex[j] = sum(<j)
+        lo_vals = jnp.take(cum_ex, lo_local, axis=0)
+        s = hi - lo_vals
+        if agg == "mean":
+            cnt = (t_global - lo_global + 1).astype(jnp.float32)
+            s = s / cnt[:, None]
+        o_ref[...] = s.astype(o_ref.dtype)
+    else:  # max
+        t_global = i * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (block_s,), 0)
+        acc = jnp.full_like(cur, -jnp.inf)
+        for j in range(window):                 # static unroll, w small
+            idx = block_s - j + jax.lax.broadcasted_iota(
+                jnp.int32, (block_s,), 0)       # cur row t ↔ both[bs + t - j]
+            shifted = jnp.take(both, jnp.clip(idx, 0, 2 * block_s - 1),
+                               axis=0)
+            use = (t_global - j) >= 0           # clamp at sequence start
+            acc = jnp.where(use[:, None], jnp.maximum(acc, shifted), acc)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def window_agg_kernel(x: jax.Array, *, window: int, agg: str = "mean",
+                      block_s: int = 256, interpret: bool = True
+                      ) -> jax.Array:
+    """x: (S_pad, C_pad), S_pad % block_s == 0, window ≤ block_s."""
+    S, C = x.shape
+    if window > block_s:
+        raise ValueError("window must be ≤ block_s")
+    kernel = functools.partial(_kernel, window=window, agg=agg,
+                               block_s=block_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(S // block_s,),
+        in_specs=[
+            # previous block (index clamped at 0; masked inside the kernel)
+            pl.BlockSpec((block_s, C),
+                         lambda i: (jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((block_s, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, C), x.dtype),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state; only calling it does (after the caller has set
+XLA_FLAGS if it wants placeholder devices — see launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 v5e pod (256 chips), or 2 such pods (512 chips).
+
+    Axes: ``data`` (batch / fsdp), ``model`` (TP/EP), plus ``pod`` (DP over
+    DCN) in the multi-pod configuration.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist right now, as a 1-D data mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,13 @@
+"""repro.models — LM substrate for the assigned architectures.
+
+Composable decoder blocks (GQA attention with local/global windows, logit
+softcaps, qk-norm, partial rotary; MoE FF; Mamba-1 SSM; cross-attention)
+assembled per-architecture from a :class:`~repro.models.config.ModelConfig`
+layer pattern, scanned over stacked homogeneous layer groups for compact
+HLO and fast compiles.
+"""
+
+from repro.models.config import ModelConfig, BlockSpec
+from repro.models import model as model_lib
+
+__all__ = ["ModelConfig", "BlockSpec", "model_lib"]

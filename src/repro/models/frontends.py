@@ -1,0 +1,41 @@
+"""Modality frontend STUBS (per assignment spec).
+
+``[audio]`` / ``[vlm]`` archs specify the transformer **backbone** only;
+the modality frontend supplies precomputed embeddings:
+
+  * musicgen-medium — the EnCodec tokenizer is stubbed: the backbone
+    consumes codec *token ids* (vocab 2048) directly; this module provides
+    a deterministic fake codec-token generator for smoke tests/examples.
+  * llama-3.2-vision-11b — the ViT tower is stubbed: cross-attention
+    layers consume precomputed patch embeddings (B, n_vision_tokens,
+    d_model), generated here (and as ShapeDtypeStructs by
+    ``launch.dryrun.input_specs``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def fake_codec_tokens(cfg: ModelConfig, batch: int, seq: int,
+                      seed: int = 0) -> np.ndarray:
+    """Deterministic EnCodec-like token stream (audio stub)."""
+    rng = np.random.default_rng(seed)
+    # codec streams are locally smooth: random walk over the codebook
+    steps = rng.integers(-3, 4, size=(batch, seq))
+    toks = np.cumsum(steps, axis=1) % (cfg.vocab_size - 2) + 2
+    return toks.astype(np.int32)
+
+
+def fake_patch_embeddings(cfg: ModelConfig, batch: int,
+                          seed: int = 0) -> np.ndarray:
+    """Deterministic ViT-output stand-in (vision stub): (B, Nv, d_model)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 0.02, size=(batch, cfg.n_vision_tokens, cfg.d_model))
+    return x.astype(np.float32)

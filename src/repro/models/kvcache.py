@@ -1,0 +1,92 @@
+"""KV / SSM state caches for serving.
+
+One cache dict per attention layer:
+
+  * ``k`` / ``v`` — (B, C, Hkv, D) slots; C = capacity. C ≥ max_seq gives a
+    dense cache; C = sliding_window gives a **ring** cache (SWA archs —
+    mixtral's long_500k decode holds a 4096-slot ring, not 524k slots).
+  * ``pos`` — (B, C) absolute position stored in each slot (−1 = empty);
+    feeds the causal/window masks of chunked_attention directly, so ring
+    wraparound needs no special-casing in the attention math.
+  * ``idx`` — (B,) int32, monotone per-row count of tokens written — so a
+    continuous-batching engine can hold requests at different depths in
+    one batched cache (repro.serve.engine).
+
+SSM layers use ``repro.models.ssm.init_ssm_state`` instead (h + conv ring);
+cross-attention layers cache nothing (vision kv is recomputed from the
+frozen embeds — O(n_vision_tokens), cheap relative to a decode step).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Cache = Dict[str, jax.Array]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int,
+                  dtype=None) -> Cache:
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def layer_capacity(cfg: ModelConfig, local: bool, max_seq: int) -> int:
+    """Ring capacity for local layers, dense for global ones."""
+    if local and cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def update_cache(cache: Cache, k: jax.Array, v: jax.Array,
+                 positions: jax.Array
+                 ) -> Tuple[Cache, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Write S new kv entries at ring slots; return the full cache view.
+
+    k/v: (B, S, Hkv, D); positions: (B, S) absolute. Returns
+    (cache', k_all, v_all, pos_all, valid_all) where *_all are the (B, C)
+    capacity views for chunked_attention.
+    """
+    B, C = cache["k"].shape[:2]
+    S = k.shape[1]
+    if S == 1:
+        # decode fast path: mask-select instead of a 2-D scatter — the
+        # scatter lowers to full-cache transpose copies (measured ~3×
+        # cache bytes per layer, §Perf); the where-update is one
+        # read+write and SPMD-shards cleanly along the capacity dim.
+        slot = (cache["idx"] % C)[:, None]                       # (B,1)
+        hit = jnp.arange(C, dtype=jnp.int32)[None] == slot       # (B,C)
+        k_all = jnp.where(hit[..., None, None],
+                          k.astype(cache["k"].dtype), cache["k"])
+        v_all = jnp.where(hit[..., None, None],
+                          v.astype(cache["v"].dtype), cache["v"])
+        pos_all = jnp.where(hit, positions.astype(jnp.int32), cache["pos"])
+        new = {"k": k_all, "v": v_all, "pos": pos_all,
+               "idx": cache["idx"] + 1}
+        return new, k_all, v_all, pos_all, pos_all >= 0
+    if S >= C:
+        # segment longer than the ring: only the last C tokens survive;
+        # slicing the tail keeps scatter indices unique (defined order).
+        k, v = k[:, -C:], v[:, -C:]
+        positions = positions[:, -C:]
+        offs = jnp.arange(C, dtype=jnp.int32)[None] + (S - C)
+        n_new = C
+    else:
+        offs = jnp.arange(S, dtype=jnp.int32)[None]
+        n_new = S
+    slots = (cache["idx"][:, None] + offs) % C                   # (B, n_new)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k_all = cache["k"].at[rows, slots].set(k.astype(cache["k"].dtype))
+    v_all = cache["v"].at[rows, slots].set(v.astype(cache["v"].dtype))
+    pos_all = cache["pos"].at[rows, slots].set(positions.astype(jnp.int32))
+    new = {"k": k_all, "v": v_all, "pos": pos_all, "idx": cache["idx"] + S}
+    return new, k_all, v_all, pos_all, pos_all >= 0

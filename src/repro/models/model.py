@@ -1,0 +1,176 @@
+"""LM wrapper: embed → backbone → head; loss; prefill; decode.
+
+Pure functions over explicit param pytrees — directly jit/pjit-able; the
+launch layer wraps them with shardings and the trainer adds optimizer +
+remat policy. Modality frontends (musicgen EnCodec frames, llama-vision
+patches) enter as precomputed embedding tensors (stubs per spec; see
+repro.models.frontends).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    k_embed, k_body, k_norm = jax.random.split(key, 3)
+    p = {"embed": L.init_embed(cfg, k_embed),
+         "final_norm": L.init_norm(cfg, k_norm)}
+    p.update(T.init_backbone(cfg, k_body))
+    return p
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            vision: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            caches: Optional[Params] = None,
+            remat: bool = False,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    """tokens (B, S) int32 → (logits (B, S, V), new_caches, aux).
+
+    ``return_hidden=True`` skips the LM head and returns the final normed
+    hidden states instead (the chunked-CE loss path computes head+softmax
+    per token chunk so the (T, V) f32 logits buffer never materialises).
+    """
+    from repro.distributed.sharding import constrain
+
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x = constrain(x, "batch", "seq", None)
+    if vision is not None:
+        vision = vision.astype(x.dtype)
+    x, new_caches, aux = T.apply_backbone(
+        cfg, params, x, positions=positions, vision=vision,
+        caches=caches, remat=remat)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, new_caches, aux
+    logits = L.lm_logits(cfg, params["embed"], x)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def _ce_terms(cfg: ModelConfig, embed: Params, x: jax.Array,
+              labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Σ masked CE and Σ mask over a (T, d) hidden slab."""
+    logits = L.lm_logits(cfg, embed, x).astype(jnp.float32)
+    mask = (labels != 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return ((lse - gold) * mask).sum(), mask.sum()
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat: bool = False, loss_chunk: int = 0
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: {"tokens": (B,S) int32, "labels": (B,S) int32, pad=0
+    [, "vision": (B,Nv,d)]} → (scalar loss, metrics).
+
+    ``loss_chunk > 0`` computes head+CE in rematerialised token chunks —
+    the (T, V) f32 logits tensor (4.2 GB/seq at command-r scale) never
+    lives in HBM, at the cost of recomputing chunk logits in the backward
+    (§Perf memory iteration)."""
+    labels = batch["labels"]
+    B, S = labels.shape
+    if loss_chunk and (B * S) % loss_chunk == 0:
+        x, _, aux = forward(cfg, params, batch["tokens"],
+                            vision=batch.get("vision"), remat=remat,
+                            return_hidden=True)
+        xf = x.reshape(B * S, -1)
+        lf = labels.reshape(B * S)
+        n = (B * S) // loss_chunk
+
+        @jax.checkpoint
+        def chunk_fn(carry, xs):
+            xc, lc = xs
+            ce_c, m_c = _ce_terms(cfg, params["embed"], xc, lc)
+            return (carry[0] + ce_c, carry[1] + m_c), None
+
+        (ce_sum, m_sum), _ = jax.lax.scan(
+            chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xf.reshape(n, loss_chunk, -1), lf.reshape(n, loss_chunk)))
+        denom = jnp.maximum(m_sum, 1.0)
+        ce_mean = ce_sum / denom
+    else:
+        logits, _, aux = forward(cfg, params, batch["tokens"],
+                                 vision=batch.get("vision"), remat=remat)
+        mask = (labels != 0).astype(jnp.float32)
+        logits_f = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits_f, axis=-1)
+        gold = jnp.take_along_axis(logits_f,
+                                   labels[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        ce = (lse - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce_mean = ce.sum() / denom
+    loss = (ce_mean
+            + cfg.router_aux_weight * aux["aux_loss"]
+            + cfg.router_z_weight * aux["z_loss"])
+    metrics = {"ce": ce_mean, "loss": loss, "tokens": denom,
+               "aux_loss": aux["aux_loss"], "z_loss": aux["z_loss"],
+               "dropped_frac": aux["dropped_frac"]}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            caches: Params, *, vision: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Run the prompt through the model, filling caches.
+
+    Returns (last-position logits (B, V), caches)."""
+    logits, caches, _ = forward(cfg, params, tokens, vision=vision,
+                                caches=caches)
+    return logits[:, -1], caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                pos: jax.Array, caches: Params, *,
+                vision: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step. token (B,) int32, pos (B,) absolute position.
+
+    Returns (logits (B, V), new caches)."""
+    logits, caches, _ = forward(cfg, params, token[:, None],
+                                positions=pos[:, None].astype(jnp.int32),
+                                vision=vision, caches=caches)
+    return logits[:, 0], caches
+
+
+def greedy_generate(cfg: ModelConfig, params: Params, prompt: jax.Array,
+                    n_tokens: int, max_seq: int,
+                    vision: Optional[jax.Array] = None) -> jax.Array:
+    """Reference greedy decoding (tests/examples; the serving engine in
+    repro.serve batches and schedules for real)."""
+    B, S = prompt.shape
+    caches = T.init_caches(cfg, B, max_seq)
+    logits, caches = prefill(cfg, params, prompt, caches, vision=vision)
+    out = [jnp.argmax(logits, -1)]
+    for i in range(n_tokens - 1):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, caches = decode_step(cfg, params, out[-1], pos, caches,
+                                     vision=vision)
+        out.append(jnp.argmax(logits, -1))
+    return jnp.stack(out, axis=1)

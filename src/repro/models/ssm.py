@@ -1,0 +1,155 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba).
+
+Recurrence (per channel c, state dim n):
+
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t
+
+with input-dependent Δ, B, C ("selective"). The sequence dimension is
+processed in **chunks** (`cfg.ssm_chunk`): an outer `lax.scan` carries the
+state across chunks while an inner `lax.associative_scan` parallelises
+within the chunk — this bounds the materialised (B, chunk, d_inner, N)
+tensor, which is what lets the 32k-prefill and train cells fit HBM
+(DESIGN.md §5). Scan state is f32 regardless of activation dtype.
+
+Decode path: O(1) single-token state update + a (conv_w-1)-deep causal
+conv ring — the "KV cache" of an SSM arch.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_mamba(cfg: ModelConfig, key) -> Params:
+    d, di, n, r, c = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.dt_rank, cfg.ssm_conv)
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    pd = cfg.param_dtype
+    # S4D-real initialisation for A; dt bias ~ softplus^-1(uniform dt range)
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), pd) * std,
+        "conv_w": jax.random.normal(ks[1], (c, di), pd) * (1.0 / math.sqrt(c)),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * n), pd)
+                  * (1.0 / math.sqrt(di)),
+        "dt_proj": jax.random.normal(ks[3], (r, di), pd) * (1.0 / math.sqrt(r)),
+        "dt_bias": dt_bias.astype(pd),
+        "A_log": jnp.log(a_init).astype(pd),
+        "D": jnp.ones((di,), pd),
+        "out_proj": jax.random.normal(ks[5], (di, d), pd)
+                    * (std / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.dtype),
+    }
+
+
+def _causal_conv(cfg: ModelConfig, p: Params, x: jax.Array,
+                 conv_state: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq. x: (B, S, di) → (y, new_conv_state)."""
+    c = cfg.ssm_conv
+    w = p["conv_w"].astype(x.dtype)                    # (c, di)
+    if conv_state is None:
+        head = jnp.zeros((x.shape[0], c - 1, x.shape[2]), x.dtype)
+    else:
+        head = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([head, x], axis=1)            # (B, S+c-1, di)
+    S = x.shape[1]
+    y = sum(xp[:, j:j + S] * w[j][None, None, :] for j in range(c))
+    y = y + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(c - 1):] if c > 1 else head
+    return y, new_state
+
+
+def _ssm_inputs(cfg: ModelConfig, p: Params, u: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """u: (B, S, di) → (dA, dBu, C, Du) terms of the recurrence, f32."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    uf = u.astype(jnp.float32)
+    proj = uf @ p["x_proj"].astype(jnp.float32)        # (B,S,r+2n)
+    dt_r, Bm, Cm = proj[..., :r], proj[..., r:r + n], proj[..., r + n:]
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (di, n)
+    dA = jnp.exp(dt[..., None] * A[None, None])        # (B,S,di,n)
+    dBu = (dt * uf)[..., None] * Bm[:, :, None, :]     # (B,S,di,n)
+    return dA, dBu, Cm, uf
+
+
+def _scan_chunk(dA, dBu, h0):
+    """Within-chunk parallel scan. h_t = dA_t h_{t-1} + dBu_t, h_{-1}=h0."""
+    def op(a, b):
+        a_l, b_l = a
+        a_r, b_r = b
+        return a_l * a_r, b_l * a_r + b_r
+    A_cum, B_cum = jax.lax.associative_scan(op, (dA, dBu), axis=1)
+    h = A_cum * h0[:, None] + B_cum                    # (B,C,di,n)
+    return h, h[:, -1]
+
+
+def apply_mamba(cfg: ModelConfig, p: Params, x: jax.Array,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d) → (y, new_state). S=1 routes to the O(1) decode path."""
+    from repro.distributed.sharding import constrain
+
+    B, S, d = x.shape
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)                   # (B,S,2di)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = constrain(u, "batch", None, "d_inner")
+
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(cfg, p, u, conv_state)
+    u = jax.nn.silu(u)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+    if S == 1:  # decode fast path
+        dA, dBu, Cm, uf = _ssm_inputs(cfg, p, u)
+        h = dA[:, 0] * h0 + dBu[:, 0]                  # (B,di,n)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+        h_last = h
+    else:
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk != 0:
+            chunk = S  # fallback: single chunk (small seqs)
+        nch = S // chunk
+        uc = u.reshape(B, nch, chunk, cfg.d_inner).swapaxes(0, 1)
+
+        def body(h_carry, u_ch):
+            dA, dBu, Cm, uf = _ssm_inputs(cfg, p, u_ch)
+            hs, h_last = _scan_chunk(dA, dBu, h_carry)
+            y_ch = jnp.einsum("bcdn,bcn->bcd", hs, Cm)
+            return h_last, y_ch
+
+        h_last, ys = jax.lax.scan(body, h0, uc)
+        y = ys.swapaxes(0, 1).reshape(B, S, cfg.d_inner)
+
+    y = (y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None]
+         ).astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    new_state = {"h": h_last, "conv": new_conv} if (state is not None or S == 1) \
+        else {"h": h_last, "conv": new_conv}
+    return out, new_state

@@ -1,0 +1,220 @@
+"""Block assembly: per-layer pattern → scanned stacks (DESIGN.md §4/§6).
+
+A model is ``first_k_dense`` unstacked leading blocks followed by
+``n_repeats`` copies of a ``period``-long block group; the group's params
+are stacked over repeats and driven by one `jax.lax.scan`, so the HLO holds
+exactly one period of blocks regardless of depth (61-layer kimi compiles
+the same program size as a 2-layer smoke config). Caches ride the scan as
+per-position stacked xs/ys.
+
+Param tree (names are load-bearing — repro.distributed.sharding pattern-
+matches them):
+
+    {"embed": {...}, "lead": [block, ...],
+     "scan": [stacked_block_pos0, ...], "final_norm": {...}}
+    block = {"norm1", "norm2", ("attn"|"mamba"|"xattn"), ("mlp"|"moe"),
+             ["post_norm1", "post_norm2"]}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.kvcache import init_kv_cache, layer_capacity
+
+Params = Dict[str, Any]
+
+AUX_KEYS = ("aux_loss", "z_loss", "dropped_frac")
+
+
+def _zero_aux() -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _add_aux(a: Dict[str, jax.Array], b: Dict[str, jax.Array]
+             ) -> Dict[str, jax.Array]:
+    if not b:
+        return a
+    return {k: a[k] + b.get(k, 0.0) for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, spec: BlockSpec, key,
+               lead: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, ks[0]),
+                 "norm2": L.init_norm(cfg, ks[1])}
+    if spec.mixer == "mamba":
+        p["mamba"] = ssm_lib.init_mamba(cfg, ks[2])
+    elif spec.mixer == "xattn":
+        p["xattn"] = L.init_attention(cfg, ks[2], cross=True)
+    else:
+        p["attn"] = L.init_attention(cfg, ks[2])
+    if spec.moe:
+        p["moe"] = moe_lib.init_moe(cfg, ks[3])
+    elif cfg.d_ff > 0:
+        d_ff = (cfg.first_dense_d_ff or None) if lead else None
+        p["mlp"] = L.init_mlp(cfg, ks[3], d_ff=d_ff)
+    else:
+        # pure Mamba-1 archs (falcon-mamba): the mixer IS the layer — no FF
+        del p["norm2"]
+    if cfg.sandwich_norm:
+        k5, k6 = jax.random.split(ks[3])
+        p["post_norm1"] = L.init_norm(cfg, k5)
+        p["post_norm2"] = L.init_norm(cfg, k6)
+    return p
+
+
+def apply_block(cfg: ModelConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                *, positions: jax.Array,
+                vision: Optional[jax.Array] = None,
+                cache: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
+    from repro.distributed.sharding import constrain
+
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if spec.mixer == "mamba":
+        y, new_cache = ssm_lib.apply_mamba(
+            cfg, p["mamba"], h,
+            state=cache if (cache is not None and cache) else None)
+        if cache is not None and not cache:   # stateless fwd: drop state
+            new_cache = cache
+        elif cache is None:
+            new_cache = None
+    elif spec.mixer == "xattn":
+        if vision is None:
+            raise ValueError("xattn block needs vision embeddings")
+        y, _ = L.attention_block(cfg, p["xattn"], h, positions=positions,
+                                 local=False, kv_x=vision)
+        new_cache = cache
+    else:
+        y, new_cache = L.attention_block(
+            cfg, p["attn"], h, positions=positions,
+            local=(spec.mixer == "local"),
+            cache=cache if (cache is not None and cache) else None)
+        if cache is not None and not cache:
+            new_cache = cache
+    if cfg.sandwich_norm:
+        y = L.apply_norm(cfg, p["post_norm1"], y)
+    x = x + y
+    x = constrain(x, "batch", "seq", None)
+
+    if "norm2" not in p:          # FF-less block (pure Mamba-1 layer)
+        return x, new_cache, {}
+    h = L.apply_norm(cfg, p["norm2"], x)
+    if spec.moe:
+        y, aux = moe_lib.apply_moe(cfg, p["moe"], h)
+    else:
+        y, aux = L.apply_mlp(cfg, p["mlp"], h), {}
+    if cfg.sandwich_norm:
+        y = L.apply_norm(cfg, p["post_norm2"], y)
+    x = x + y
+    x = constrain(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Backbone init
+# ---------------------------------------------------------------------------
+
+def init_backbone(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers)
+    lead = [init_block(cfg, cfg.block_spec(i), keys[i], lead=True)
+            for i in range(cfg.first_k_dense)]
+    specs = cfg.period_specs()
+    scan: List[Params] = []
+    for j, spec in enumerate(specs):
+        per_repeat = [
+            init_block(cfg, spec,
+                       keys[cfg.first_k_dense + r * cfg.period + j])
+            for r in range(cfg.n_repeats)]
+        scan.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_repeat))
+    return {"lead": lead, "scan": scan}
+
+
+# ---------------------------------------------------------------------------
+# Cache init (mirrors backbone structure)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    def one(spec: BlockSpec) -> Dict[str, jax.Array]:
+        if spec.mixer == "mamba":
+            return ssm_lib.init_ssm_state(cfg, batch)
+        if spec.mixer == "xattn":
+            return {}
+        cap = layer_capacity(cfg, spec.mixer == "local", max_seq)
+        return init_kv_cache(cfg, batch, cap)
+
+    lead = [one(cfg.block_spec(i)) for i in range(cfg.first_k_dense)]
+    scan = []
+    for j, spec in enumerate(cfg.period_specs()):
+        per_repeat = [one(spec) for _ in range(cfg.n_repeats)]
+        if per_repeat and per_repeat[0]:
+            scan.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_repeat))
+        else:
+            scan.append({})
+    return {"lead": lead, "scan": scan}
+
+
+# ---------------------------------------------------------------------------
+# Backbone apply
+# ---------------------------------------------------------------------------
+
+def apply_backbone(cfg: ModelConfig, params: Params, x: jax.Array, *,
+                   positions: jax.Array,
+                   vision: Optional[jax.Array] = None,
+                   caches: Optional[Params] = None,
+                   remat: bool = False
+                   ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    aux = _zero_aux()
+    new_lead: List[Any] = []
+    for i in range(cfg.first_k_dense):
+        c = caches["lead"][i] if caches is not None else None
+        x, c2, a = apply_block(cfg, cfg.block_spec(i), params["lead"][i], x,
+                               positions=positions, vision=vision, cache=c)
+        new_lead.append(c2)
+        aux = _add_aux(aux, a)
+
+    specs = cfg.period_specs()
+
+    if cfg.n_repeats > 0:
+        def body(carry, xs):
+            xc, aux_c = carry
+            block_params, block_caches = xs
+            new_caches = []
+            for j, spec in enumerate(specs):
+                c = block_caches[j] if caches is not None else None
+                xc, c2, a = apply_block(cfg, spec, block_params[j], xc,
+                                        positions=positions, vision=vision,
+                                        cache=c)
+                new_caches.append({} if c2 is None else c2)
+                aux_c = _add_aux(aux_c, a)
+            return (xc, aux_c), tuple(new_caches)
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs_caches = (tuple(caches["scan"]) if caches is not None
+                     else tuple({} for _ in specs))
+        (x, aux), new_scan = jax.lax.scan(
+            body, (x, aux), (tuple(params["scan"]), xs_caches))
+    else:
+        new_scan = tuple()
+
+    new_caches_tree = None
+    if caches is not None:
+        new_caches_tree = {"lead": new_lead, "scan": list(new_scan)}
+    return x, new_caches_tree, aux

@@ -1,0 +1,1 @@
+"""repro.pipeline — DS operators, windows, and the paper's workloads."""

@@ -1,0 +1,7 @@
+"""repro.serve — batched serving engine with JITA-style request scheduling."""
+
+from repro.serve.serve_step import build_prefill_step, build_decode_step
+from repro.serve.engine import ServeEngine, Request, EngineConfig
+
+__all__ = ["build_prefill_step", "build_decode_step",
+           "ServeEngine", "Request", "EngineConfig"]

@@ -1,0 +1,59 @@
+"""Jit-able prefill / decode step builders.
+
+``serve_step`` here is what the decode_* / long_* dry-run shapes lower:
+one new token against a KV cache of ``seq_len`` (per the assignment's
+shape semantics). MoE capacity is widened at serve time (no-drop style)
+via ``serve_capacity_factor`` — capacity drops are a training-throughput
+trade, not something to serve users with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as model_lib
+from repro.models import transformer as T
+
+
+def serve_config(cfg: ModelConfig, capacity_factor: float = 4.0
+                 ) -> ModelConfig:
+    if cfg.n_experts and cfg.capacity_factor < capacity_factor:
+        return dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    return cfg
+
+
+def build_prefill_step(cfg: ModelConfig, capacity_factor: float = 4.0):
+    scfg = serve_config(cfg, capacity_factor)
+
+    def prefill_step(params, tokens, caches, vision=None):
+        return model_lib.prefill(scfg, params, tokens, caches, vision=vision)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, capacity_factor: float = 4.0,
+                      greedy: bool = True, temperature: float = 1.0):
+    scfg = serve_config(cfg, capacity_factor)
+
+    def decode_step(params, token, pos, caches, vision=None,
+                    rng: Optional[jax.Array] = None):
+        logits, caches = model_lib.decode_step(scfg, params, token, pos,
+                                               caches, vision=vision)
+        if greedy or rng is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                rng, logits.astype(jnp.float32) / temperature).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return decode_step
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    return T.init_caches(cfg, batch, max_seq)

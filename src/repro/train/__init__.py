@@ -1,0 +1,8 @@
+"""repro.train — optimizers, train step, checkpointing, fault tolerance."""
+
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates
+from repro.train.train_step import build_train_step
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates",
+           "build_train_step", "CheckpointManager"]

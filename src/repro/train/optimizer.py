@@ -1,0 +1,232 @@
+"""Optimizers: AdamW, SGD-momentum, Adafactor-lite, 8-bit Adam states.
+
+Self-contained pytree optimizers (no external deps):
+
+  * ``adamw`` — fp32 m/v states;
+  * ``adamw8bit`` — m/v stored int8 with per-block (256) absmax scales —
+    4× optimizer-state memory reduction (the distributed-optimization trick
+    that makes kimi-k2-scale training fit; DESIGN.md §5);
+  * ``adafactor`` — factored second moment for ≥2-D leaves (row/col
+    statistics), full moment for vectors — sublinear state memory;
+  * ``sgdm`` — momentum baseline.
+
+All expose the same (init_opt_state, apply_updates) API operating on
+arbitrary param pytrees, with global-norm clipping and a warmup-cosine
+schedule. States inherit the params' sharding automatically under pjit
+(elementwise ops propagate shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+_QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adamw8bit | adafactor | sgdm
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    momentum: float = 0.9          # sgdm
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization (for adamw8bit)
+# ---------------------------------------------------------------------------
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize f32 → (int8 values, f32 per-block scales)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // _QBLOCK)
+    padded = jnp.pad(flat, (0, nb * _QBLOCK - n)).reshape(nb, _QBLOCK)
+    scale = jnp.max(jnp.abs(padded), axis=1, keepdims=True) / 127.0
+    q = jnp.round(padded / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params: Params, cfg: OptConfig) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.name == "adamw":
+        return {"m": jax.tree_util.tree_map(f32, params),
+                "v": jax.tree_util.tree_map(f32, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adamw8bit":
+        def q0(p):
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return {"m": jax.tree_util.tree_map(q0, params),
+                "v": jax.tree_util.tree_map(q0, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adafactor":
+        def fac(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": jax.tree_util.tree_map(
+                    fac, params, is_leaf=lambda x: hasattr(x, "ndim")),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "sgdm":
+        return {"m": jax.tree_util.tree_map(f32, params),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
+                  cfg: OptConfig) -> Tuple[Params, Dict[str, Any],
+                                           Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    tf32 = lambda t: t.astype(jnp.float32)
+
+    if cfg.name in ("adamw", "adamw8bit"):
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = tf32(g)
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m_new / bc1
+            vh = v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 1 and cfg.weight_decay > 0:
+                delta = delta + cfg.weight_decay * tf32(p)
+            return (tf32(p) - lr * delta).astype(p.dtype), m_new, v_new
+
+        if cfg.name == "adamw":
+            out = jax.tree_util.tree_map(upd, params, grads,
+                                         state["m"], state["v"])
+            new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            new_state = {"m": new_m, "v": new_v, "step": step}
+        else:  # adamw8bit: dequant → update → requant
+            is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+            def upd8(p, g, mq, vq):
+                m = _dq8(mq["q"], mq["s"], p.shape)
+                v = _dq8(vq["q"], vq["s"], p.shape)
+                p2, m2, v2 = upd(p, g, m, v)
+                q_m, s_m = _q8(m2)
+                q_v, s_v = _q8(v2)
+                return p2, {"q": q_m, "s": s_m}, {"q": q_v, "s": s_v}
+
+            flat_p, tree = jax.tree_util.tree_flatten(params)
+            flat_g = jax.tree_util.tree_flatten(grads)[0]
+            flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_q)[0]
+            flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_q)[0]
+            outs = [upd8(p, g, m, v) for p, g, m, v
+                    in zip(flat_p, flat_g, flat_m, flat_v)]
+            new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+            new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+            new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in outs])
+            new_state = {"m": new_m, "v": new_v, "step": step}
+
+    elif cfg.name == "adafactor":
+        d2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        is_fac = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+
+        def updf(p, g, f):
+            g = tf32(g)
+            g2 = g * g + 1e-30
+            if "vr" in f:
+                vr = cfg.b2 * f["vr"] + (1 - cfg.b2) * g2.mean(-1)
+                vc = cfg.b2 * f["vc"] + (1 - cfg.b2) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_f = {"vr": vr, "vc": vc}
+            else:
+                vhat = cfg.b2 * f["v"] + (1 - cfg.b2) * g2
+                new_f = {"v": vhat}
+            delta = g / (jnp.sqrt(vhat / d2) + cfg.eps)
+            # Adafactor update clipping (RMS ≤ 1)
+            rms = jnp.sqrt(jnp.mean(delta ** 2) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if cfg.weight_decay > 0:
+                delta = delta + cfg.weight_decay * tf32(p)
+            return (tf32(p) - lr * delta).astype(p.dtype), new_f
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_f = jax.tree_util.tree_flatten(state["fac"], is_leaf=is_fac)[0]
+        outs = [updf(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+        new_fac = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+        new_state = {"fac": new_fac, "step": step}
+
+    elif cfg.name == "sgdm":
+        def upds(p, g, m):
+            m_new = cfg.momentum * m + tf32(g)
+            return (tf32(p) - lr * m_new).astype(p.dtype), m_new
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_flatten(grads)[0]
+        flat_m = jax.tree_util.tree_flatten(state["m"])[0]
+        outs = [upds(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+        new_state = {"m": new_m, "step": step}
+    else:
+        raise ValueError(cfg.name)
+
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

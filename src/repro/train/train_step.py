@@ -1,0 +1,91 @@
+"""Train-step builder: loss/grad + mixed precision + remat + grad-accum.
+
+``build_train_step`` returns a pure ``(state, batch) → (state, metrics)``
+function ready for `jax.jit` (the launch layer adds in/out shardings).
+Gradient accumulation is a `lax.scan` over microbatches — the
+pipeline-parallel-style memory relief on a 2-axis mesh (DESIGN.md §5).
+Under SPMD the data-parallel gradient all-reduce is emitted by XLA from
+the shardings; the hierarchical/compressed variants live in
+repro.distributed.collectives and are exercised via shard_map in the
+perf configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as model_lib
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+TrainState = Dict[str, Any]   # {"params", "opt", "step"}
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key) -> TrainState:
+    params = model_lib.init(cfg, key)
+    return {"params": params,
+            "opt": init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                     remat: bool = True, grad_accum: int = 1,
+                     loss_chunk: int = 0
+                     ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                   Tuple[TrainState, Dict[str, jax.Array]]]:
+    def loss_of(params, batch):
+        return model_lib.loss_fn(cfg, params, batch, remat=remat,
+                                 loss_chunk=loss_chunk)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        params = state["params"]
+        if grad_accum > 1:
+            def micro(b):
+                return {k: v.reshape(grad_accum, v.shape[0] // grad_accum,
+                                     *v.shape[1:]) for k, v in b.items()}
+
+            def body(carry, mb):
+                g_acc = carry
+                g, m = single(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return g_acc, m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, g0, micro(batch))
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(0), ms)
+        else:
+            grads, metrics = single(params, batch)
+
+        new_params, new_opt, opt_stats = apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = dict(metrics, **opt_stats)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Eval step (perplexity over a batch; used by trainer + examples)
+# ---------------------------------------------------------------------------
+
+def build_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _, metrics = model_lib.loss_fn(cfg, params, batch, remat=False)
+        return metrics
+    return eval_step

@@ -1,0 +1,121 @@
+"""Scheduler engine invariants: unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG, Task, merge
+from repro.core.resources import Link, ProcessingElement, ResourcePool, paper_pool
+from repro.core.schedulers import SCHEDULERS, schedule
+from repro.pipeline.workloads import ds_workload
+
+
+def random_dag(seed: int, n: int = 12) -> PipelineDAG:
+    rng = np.random.default_rng(seed)
+    g = PipelineDAG(f"rnd{seed}")
+    ops = ["ingest", "sql_transform", "kmeans", "summarize", "window_agg",
+           "linreg", "export"]
+    for i in range(n):
+        g.add_task(Task(f"t{i}", rng.choice(ops),
+                        work=float(rng.uniform(0.5, 20)),
+                        out_bytes=float(rng.uniform(0, 4e6)),
+                        in_bytes=float(rng.uniform(0, 8e6)) if i == 0 else 0))
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, 2), replace=False):
+            g.add_edge(f"t{j}", f"t{i}")
+    return g
+
+
+# -- DAG basics ---------------------------------------------------------------
+
+def test_cycle_rejected():
+    g = PipelineDAG()
+    g.add_task(Task("a", "ingest"))
+    g.add_task(Task("b", "export"))
+    g.add_edge("a", "b")
+    with pytest.raises(ValueError):
+        g.add_edge("b", "a")
+
+
+def test_topological_order_respects_edges():
+    g = ds_workload()
+    order = [t.name for t in g.topological_order()]
+    for t in g.tasks:
+        for s in g.successors(t.name):
+            assert order.index(t.name) < order.index(s.name)
+
+
+def test_instance_clone_independent():
+    g = ds_workload()
+    g2 = g.instance(7)
+    assert len(g2) == len(g)
+    assert all(t.name.endswith("#7") for t in g2.tasks)
+
+
+# -- schedule invariants (all policies) ------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(SCHEDULERS))
+def test_schedule_invariants(policy):
+    g = ds_workload()
+    pool = paper_pool()
+    s = schedule(g, pool, CostModel(), policy=policy)
+    assert len(s.assignments) == len(g)
+    fin = {a.task: a for a in s.assignments}
+    # dependencies: a task starts only after every predecessor finished
+    for t in g.tasks:
+        for p in g.predecessors(t.name):
+            assert fin[t.name].start >= fin[p.name].finish - 1e-9
+    # PE exclusivity: no two tasks overlap on one PE
+    by_pe = {}
+    for a in s.assignments:
+        by_pe.setdefault(a.pe, []).append((a.start, a.finish))
+    for pe, spans in by_pe.items():
+        spans.sort()
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+            assert s2 >= f1 - 1e-9, (pe, (s1, f1), (s2, f2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_eft_no_worse_than_rr_on_random_dags(seed):
+    g = random_dag(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    mk_eft = schedule(g, pool, cost, policy="eft").makespan
+    mk_rr = schedule(g, pool, cost, policy="rr").makespan
+    assert mk_eft <= mk_rr * 1.001
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_utilization_bounded(seed):
+    g = random_dag(seed)
+    pool = paper_pool(n_arm=1, n_xeon=1)
+    s = schedule(g, pool, CostModel(), policy="eft")
+    for u in s.utilization().values():
+        assert -1e-9 <= u <= 1.0 + 1e-9
+
+
+def test_contended_link_serializes():
+    """Two simultaneous big uploads over one slow link must serialize
+    (the paper's RQ1 mechanism)."""
+    g = PipelineDAG()
+    for i in range(2):
+        g.add_task(Task(f"src{i}", "ingest", work=0.1, in_bytes=15e6))
+    pool = paper_pool(n_arm=0, n_volta=0, n_xeon=2, n_v100=0, n_alveo=0)
+    s = schedule(g, pool, CostModel(), policy="eft")
+    a, b = sorted(s.assignments, key=lambda x: x.finish)
+    # 15 MB at 1.5 MB/s = 10 s each; serialized → second finishes ≥ 20 s
+    assert b.finish >= 19.9
+
+
+def test_learned_cost_model_overrides_table():
+    from repro.core.cost_model import LearnedCostModel
+    m = LearnedCostModel(min_samples=2)
+    t = Task("k", "kmeans", work=10.0)
+    pe = ProcessingElement("x", "xeon")
+    base = m.exec_time(t, pe)
+    for _ in range(3):
+        m.observe(t, pe, seconds=base * 4)
+    assert m.exec_time(t, pe) == pytest.approx(base * 4, rel=1e-6)

@@ -1,0 +1,128 @@
+"""Streams, buffer spill, stores, services, loader."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (BufferManager, Fetch, HistoricFetch, KVStore,
+                        MessageBroker, NeubotStream, Sink, StreamService,
+                        TimeSeriesStore)
+from repro.data.streams import StreamBatch, synthetic_stream
+from repro.data.loader import LoaderConfig, Prefetcher, TokenBatchLoader
+
+
+def test_stream_batch_schema_checks():
+    with pytest.raises(ValueError):
+        StreamBatch(np.zeros(3), np.zeros((2, 2), np.float32), ("a", "b"))
+    with pytest.raises(ValueError):
+        StreamBatch(np.zeros(2), np.zeros((2, 2), np.float32), ("a",))
+
+
+def test_timeseries_store_range_query():
+    store = TimeSeriesStore()
+    b1 = synthetic_stream(50, seed=1)
+    b2 = synthetic_stream(50, seed=2, t0=float(b1.ts[-1]) + 1)
+    store.write("s", b1)
+    store.write("s", b2)
+    lo, hi = float(b1.ts[10]), float(b2.ts[5])
+    out = store.query("s", lo, hi)
+    assert out is not None
+    assert (out.ts >= lo).all() and (out.ts < hi).all()
+    assert len(out) == 40 + 5        # rows 10..49 of b1 + rows 0..4 of b2
+
+
+def test_timeseries_store_rejects_out_of_order():
+    store = TimeSeriesStore()
+    store.write("s", synthetic_stream(10, seed=1, t0=100.0))
+    with pytest.raises(ValueError):
+        store.write("s", synthetic_stream(10, seed=2, t0=0.0))
+
+
+def test_kvstore_roundtrip_arrays():
+    kv = KVStore()
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    kv.put_array("a/b", arr)
+    np.testing.assert_array_equal(kv.get_array("a/b"), arr)
+    assert kv.scan("a/") == ["a/b"]
+    assert kv.get("missing") is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap_kb=st.integers(2, 64), n_batches=st.integers(1, 12))
+def test_buffer_never_loses_rows_with_spill(cap_kb, n_batches):
+    spill = TimeSeriesStore()
+    bm = BufferManager(capacity_bytes=cap_kb * 1024, spill_store=spill)
+    total = 0
+    t0 = 0.0
+    for i in range(n_batches):
+        b = synthetic_stream(40, seed=i, t0=t0)
+        t0 = float(b.ts[-1]) + 1e-3
+        bm.append(b)
+        total += len(b)
+    assert bm.stats.dropped_rows == 0
+    merged = bm.read_range(0.0, 1e12)
+    assert merged is not None and len(merged) == total
+    assert (np.diff(merged.ts) >= 0).all()
+
+
+def test_stream_service_neubot_query():
+    """Paper §3.4 query 1: EVERY 60 s max(download_speed) of last 3 min."""
+    broker = MessageBroker()
+    src = NeubotStream(rate_hz=2.0, seed=3)
+    svc = StreamService("q1", Fetch(broker, "neubotspeed", "q1"), Sink(),
+                        period=60, window=180, agg="max",
+                        column="download_speed")
+    t = 0.0
+    for batch in src.stream(batch_size=100, n_batches=12):
+        broker.publish("neubotspeed", batch)
+        t = float(batch.ts[-1])
+        svc.step(t)
+    assert svc.fired >= 6
+    for _, result in svc.sink.collected:
+        assert result > 0
+
+
+def test_stream_service_fuses_history(rng):
+    """HistoricFetch + live stream fusion (paper §3.2)."""
+    broker = MessageBroker()
+    store = TimeSeriesStore()
+    hist = synthetic_stream(200, seed=9)          # history: t ∈ [0, ~20]
+    store.write("speedtests", hist)
+    t_live = float(hist.ts[-1]) + 0.01
+    svc = StreamService("q2", Fetch(broker, "live", "q2"), Sink(),
+                        period=5.0, window=1e9, agg="count",
+                        historic=HistoricFetch(store, "speedtests"),
+                        landmark=0.0)
+    live = synthetic_stream(50, seed=10, t0=t_live)
+    broker.publish("live", live)
+    svc.step(t_live)                               # arm the recurrence
+    svc.step(float(live.ts[-1]) + 10.0)
+    assert svc.fired == 1
+    count = float(svc.sink.collected[-1][1])
+    assert count == len(hist) + len(live)
+
+
+def test_loader_packs_fixed_blocks():
+    ld = TokenBatchLoader(LoaderConfig(batch_size=4, seq_len=32,
+                                       vocab_size=1000, n_docs=64))
+    b = next(iter(ld))
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    # labels are next-token shifted within the packed block
+    ld2 = TokenBatchLoader(LoaderConfig(batch_size=4, seq_len=32,
+                                        vocab_size=1000, n_docs=64))
+    b2 = next(iter(ld2))
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b2["labels"][:, :-1])
+    assert (b["tokens"] >= 1).all() and (b["tokens"] < 1000).all()
+
+
+def test_prefetcher_preserves_order_and_propagates_errors():
+    pf = Prefetcher(iter(range(10)))
+    assert list(pf) == list(range(10))
+
+    def boom():
+        yield 1
+        raise RuntimeError("io error")
+    pf = Prefetcher(boom())
+    assert next(pf) == 1
+    with pytest.raises(RuntimeError):
+        list(pf)

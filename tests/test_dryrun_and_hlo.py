@@ -1,0 +1,98 @@
+"""Dry-run harness + HLO analysis (subprocess: needs placeholder devices)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def test_hlo_analysis_on_synthetic_scan():
+    """Trip counts, scan-corrected dot flops, collective detection."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, json
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import hlo_analysis as H
+
+        def f(x, w):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), ()
+            out, _ = jax.lax.scan(body, x, w)
+            return out.sum()
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        with jax.set_mesh(mesh):
+            comp = jax.jit(f, in_shardings=(
+                NamedSharding(mesh, P("data", None)),
+                NamedSharding(mesh, P(None, None, "model")))).lower(
+                jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)).compile()
+        an = H.analyze(comp.as_text(), chips_per_pod=4)
+        # 12 iterations × (8/2 rows × 128×128/4 matmul): ≥ 12 × 2·4·128·32
+        expect = 12 * 2 * 4 * 128 * 32
+        assert an.dot_flops >= expect, (an.dot_flops, expect)
+        assert 12 in an.trip_counts
+        assert an.hbm_bytes > 0
+        out = {"colls": sorted(an.collectives)}
+        print(json.dumps(out))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=420)
+    assert r.returncode == 0, r.stderr[-4000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # model-sharded matmul with sharded contraction → some collective
+    assert out["colls"], out
+
+
+def test_dryrun_cell_end_to_end():
+    """One full dry-run cell (small arch) through the real CLI."""
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "cell.json")
+        env = dict(os.environ, PYTHONPATH=SRC)
+        env.pop("XLA_FLAGS", None)   # dryrun sets its own 512-device flag
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "qwen3-0.6b", "--shape", "decode_32k",
+             "--mesh", "single", "--out", out],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert r.returncode == 0, r.stderr[-4000:]
+        res = json.load(open(out))
+        assert res["n_chips"] == 256
+        assert res["compile_s"] > 0
+        assert res["memory_per_device"]["total_bytes"] > 0
+        assert res["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                               "collective_s")
+        assert res["hlo"]["dot_flops_per_dev"] > 0
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS) or not os.listdir(RESULTS),
+                    reason="full dry-run sweep results not present")
+def test_dryrun_sweep_results_complete():
+    """If the sweep has been run: every (arch × shape × mesh) cell present,
+    every non-skipped cell compiled, skips only where DESIGN.md says."""
+    from repro.configs import ARCHS
+
+    SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    LONG_OK = {"mixtral-8x22b", "falcon-mamba-7b", "jamba-v0.1-52b"}
+    found = os.listdir(RESULTS)
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                name = f"{arch}__{shape}__{mesh}.json"
+                if name not in found:
+                    pytest.skip(f"sweep incomplete ({name} missing)")
+                res = json.load(open(os.path.join(RESULTS, name)))
+                if shape == "long_500k" and arch not in LONG_OK:
+                    assert res.get("skipped"), name
+                else:
+                    assert not res.get("skipped"), name
+                    assert res["compile_s"] > 0, name

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
+from repro.kernels.kmeans import kmeans_assign, kmeans_assign_ref
+from repro.kernels.window_agg import window_agg, window_agg_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,S,D,causal,window,cap", [
+    (1, 2, 2, 64, 32, True, 0, 0.0),
+    (2, 4, 2, 96, 64, True, 0, 50.0),     # GQA + softcap + ragged S
+    (1, 2, 1, 128, 48, True, 16, 0.0),    # sliding window + D pad
+    (1, 1, 1, 200, 128, False, 0, 0.0),   # non-causal
+    (1, 8, 4, 33, 16, True, 5, 30.0),     # everything at once, tiny
+])
+def test_flash_attention_vs_oracle(B, H, Hkv, S, D, causal, window, cap,
+                                   dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=32, block_k=32)
+    kr = jnp.repeat(k, H // Hkv, 2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, H // Hkv, 2).transpose(0, 2, 1, 3)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), kr, vr,
+                              causal=causal, window=window,
+                              softcap=cap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_model_chunked_attention():
+    """The kernel and the model's jnp online-softmax implement the SAME
+    algorithm — cross-check them on a GQA case."""
+    from repro.models.layers import chunked_attention
+    B, S, H, Hkv, D = 2, 64, 4, 2, 32
+    q = jnp.asarray(RNG.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    a = flash_attention(q, k, v, causal=True, window=8, block_q=32,
+                        block_k=32)
+    b = chunked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          causal=True, window=8, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,C,D,cap", [
+    (2, 4, 2, 64, 32, 0.0),
+    (1, 8, 2, 100, 64, 50.0),
+    (3, 2, 2, 256, 128, 0.0),
+    (1, 16, 8, 40, 112, 0.0),             # ragged C + odd head_dim
+])
+def test_decode_attention_vs_oracle(B, Hq, Hkv, C, D, cap, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (B, Hq, D)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, C, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, C, Hkv, D)), dtype)
+    valid = jnp.asarray(RNG.random((B, C)) > 0.3)
+    out = decode_attention(q, k, v, valid, softcap=cap, block_c=32)
+    ref = decode_attention_ref(q, k, v, valid, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("N,D,K", [(100, 8, 4), (512, 16, 7), (1000, 3, 13),
+                                   (64, 128, 32), (8, 2, 2)])
+def test_kmeans_assign_vs_oracle(N, D, K):
+    x = jnp.asarray(RNG.normal(0, 1, (N, D)), jnp.float32)
+    c = jnp.asarray(RNG.normal(0, 1, (K, D)), jnp.float32)
+    a, d2 = kmeans_assign(x, c, block_n=64)
+    ar, d2r = kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("S,C,w,agg", [
+    (100, 4, 8, "mean"), (256, 3, 16, "sum"), (300, 5, 7, "max"),
+    (64, 2, 64, "mean"), (128, 1, 1, "max"), (40, 2, 5, "sum"),
+])
+def test_window_agg_vs_oracle(S, C, w, agg):
+    x = jnp.asarray(RNG.normal(0, 1, (S, C)), jnp.float32)
+    out = window_agg(x, window=w, agg=agg, block_s=64)
+    ref = window_agg_ref(x, window=w, agg=agg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_window_agg_matches_pipeline_operator():
+    """Kernel semantics == the DS operator used by the streaming services."""
+    from repro.pipeline.operators import device_backend
+    x = jnp.asarray(RNG.normal(0, 1, (96, 4)), jnp.float32)
+    a = window_agg(x, window=8, agg="mean", block_s=32)
+    b = device_backend("window_agg")(x, window=8, agg="mean")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,155 @@
+"""Model substrate: family correctness, decode consistency, caches."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models.kvcache import init_kv_cache, update_cache
+
+
+def tiny(name="t", **kw):
+    base = dict(name=name, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab_size=256, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": tiny("dense"),
+    "gemma2ish": tiny("g2", n_layers=4, layer_pattern=("local", "attn"),
+                      sliding_window=8, attn_logit_softcap=50.0,
+                      final_logit_softcap=30.0, sandwich_norm=True,
+                      scale_embeddings=True, tie_embeddings=True),
+    "qknorm": tiny("qk", qk_norm=True, head_dim=32),
+    "partial_rope_ln": tiny("st", norm="layernorm", use_bias=True,
+                            rotary_pct=0.25, n_kv_heads=4),
+    "moe": tiny("moe", family="moe", n_layers=4, layer_pattern=("local",),
+                sliding_window=8, n_experts=4, n_experts_per_tok=2,
+                moe_period=1, moe_offset=0, capacity_factor=8.0),
+    "mamba": tiny("mb", family="ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+                  n_layers=4, layer_pattern=("mamba",), ssm_state=8,
+                  ssm_chunk=8),
+    "hybrid": tiny("jb", family="hybrid", n_layers=8,
+                   layer_pattern=("mamba",) * 4 + ("attn",) + ("mamba",) * 3,
+                   n_experts=4, n_experts_per_tok=2, moe_period=2,
+                   moe_offset=1, ssm_state=8, ssm_chunk=8,
+                   capacity_factor=8.0),
+    "vlm": tiny("vlm", family="vlm", n_layers=5, cross_attn_period=5,
+                n_vision_tokens=16),
+}
+
+
+def _batch(cfg, B=2, S=32, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 2,
+                              cfg.vocab_size)
+    b = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.family == "vlm":
+        b["vision"] = jnp.asarray(np.random.default_rng(0).normal(
+            0, .02, (B, cfg.n_vision_tokens, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILIES))
+def test_family_loss_finite_and_decode_consistent(fam):
+    cfg = FAMILIES[fam]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = _batch(cfg)
+    loss, metrics = M.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    toks, vis = batch["tokens"], batch.get("vision")
+    logits_full, _, _ = M.forward(cfg, params, toks, vision=vis)
+    assert logits_full.shape == (B, S, cfg.vocab_size)
+    caches = T.init_caches(cfg, B, S + 8)
+    lg_pre, caches = M.prefill(cfg, params, toks[:, :S - 1], caches,
+                               vision=vis)
+    lg_dec, _ = M.decode_step(cfg, params, toks[:, S - 1],
+                              jnp.full((B,), S - 1, jnp.int32), caches,
+                              vision=vis)
+    np.testing.assert_allclose(np.asarray(lg_pre),
+                               np.asarray(logits_full[:, S - 2]),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(logits_full[:, S - 1]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_ring_cache_decode_matches_full_attention_window():
+    cfg = tiny("ring", layer_pattern=("local",), sliding_window=8)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, 256)
+    logits_full, _, _ = M.forward(cfg, params, toks)
+    caches = T.init_caches(cfg, B, max_seq=S + 4)     # ring cap = window = 8
+    assert caches["scan"][0]["k"].shape[2] == 8       # (R, B, C=win, H, D)? see layout
+    M_, _ = M.prefill(cfg, params, toks[:, :S - 1], caches)[0], None
+    lgp, caches = M.prefill(cfg, params, toks[:, :S - 1],
+                            T.init_caches(cfg, B, max_seq=S + 4))
+    lgd, _ = M.decode_step(cfg, params, toks[:, S - 1],
+                           jnp.full((B,), S - 1, jnp.int32), caches)
+    np.testing.assert_allclose(np.asarray(lgd),
+                               np.asarray(logits_full[:, S - 1]), atol=2e-2)
+
+
+def test_kv_cache_ring_wraparound_positions():
+    cfg = tiny("c")
+    cache = init_kv_cache(cfg, batch=2, capacity=4)
+    hd, kvh = cfg.head_dim, cfg.n_kv_heads
+    for step in range(6):
+        k = jnp.ones((2, 1, kvh, hd)) * step
+        pos = jnp.full((2, 1), step, jnp.int32)
+        cache, k_all, v_all, pos_all, valid = update_cache(cache, k, k, pos)
+    # capacity 4, wrote 6 → slots hold positions {2,3,4,5}
+    assert sorted(np.asarray(pos_all[0]).tolist()) == [2, 3, 4, 5]
+    assert bool(valid.all())
+    assert int(cache["idx"][0]) == 6
+
+
+def test_moe_capacity_drops_are_reported():
+    cfg = tiny("moedrop", family="moe", n_experts=4, n_experts_per_tok=2,
+               moe_period=1, moe_offset=0, capacity_factor=0.25)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    _, m = M.loss_fn(cfg, params, _batch(cfg))
+    assert float(m["dropped_frac"]) > 0
+
+
+def test_param_counts_match_published():
+    from repro.configs import get_config
+    expected = {"gemma2-9b": 9.2e9, "qwen3-0.6b": 0.6e9,
+                "kimi-k2-1t-a32b": 1.03e12, "mixtral-8x22b": 141e9,
+                "falcon-mamba-7b": 7.3e9, "jamba-v0.1-52b": 52e9}
+    for name, want in expected.items():
+        got = get_config(name).param_counts()["total"]
+        assert abs(got - want) / want < 0.12, (name, got, want)
+    # active-params for the MoEs
+    assert abs(get_config("kimi-k2-1t-a32b").param_counts()["active"]
+               - 33e9) / 33e9 < 0.1
+    assert abs(get_config("mixtral-8x22b").param_counts()["active"]
+               - 39e9) / 39e9 < 0.1
+
+
+def test_long_decode_support_flags():
+    from repro.configs import ARCHS, get_config
+    runs = {a for a in ARCHS if get_config(a).supports_long_decode}
+    assert runs == {"mixtral-8x22b", "falcon-mamba-7b", "jamba-v0.1-52b"}
+
+
+def test_remat_matches_no_remat():
+    cfg = FAMILIES["dense"]
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    l1, _ = M.loss_fn(cfg, params, batch, remat=False)
+    l2, _ = M.loss_fn(cfg, params, batch, remat=True)
+    g1 = jax.grad(lambda p: M.loss_fn(cfg, p, batch, remat=False)[0])(params)
+    g2 = jax.grad(lambda p: M.loss_fn(cfg, p, batch, remat=True)[0])(params)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), g1, g2)
+    assert max(jax.tree_util.tree_leaves(d)) < 1e-5

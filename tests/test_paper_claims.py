@@ -1,0 +1,86 @@
+"""Paper-reproduction claims (EXPERIMENTS.md §Paper-repro; Figs 6–7).
+
+The emulation must reproduce the paper's aggregate observations:
+
+  RQ1/Fig6 — Edge-only and Server-only are the two worst configurations;
+             more parallel resources → lower makespan; best = max config.
+  RQ3      — best mixed vs Server-only ≈ −57 % execution time.
+  Fig7a    — EFT ≈ ETF; both ≈ −57..65 % vs RR.
+  Fig7b    — EFT/ETF mean utilisation ≈ +20-35 pts vs RR.
+
+Tolerances reflect that the paper's per-task tables are unpublished (our
+constants are calibrated; see repro.pipeline.workloads).
+"""
+
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.simulator import (best_config, sweep_policies,
+                                  sweep_resource_configs)
+from repro.pipeline.workloads import ds_workload
+
+N = 100
+
+
+@pytest.fixture(scope="module")
+def fig6():
+    return sweep_resource_configs(ds_workload(), n_instances=N)
+
+
+@pytest.fixture(scope="module")
+def fig7():
+    return {r.policy: r for r in sweep_policies(ds_workload(), n_instances=N)}
+
+
+def test_fig6_extremes_are_worst(fig6):
+    mk = {r.label: r.makespan for r in fig6}
+    worst_two = sorted(mk, key=mk.get)[-2:]
+    assert set(worst_two) == {"Edge only", "Server only"}
+
+
+def test_fig6_more_resources_faster(fig6):
+    mk = {r.label: r.makespan for r in fig6}
+    # monotone in ARM count at fixed Xeon count and vice versa
+    for x in (1, 2, 3):
+        assert mk[f"1ARM+{x}Xeon"] > mk[f"3ARM+{x}Xeon"]
+        assert mk[f"{x}ARM+1Xeon"] > mk[f"{x}ARM+3Xeon"]
+    assert best_config(fig6).label == "3ARM+3Xeon"
+
+
+def test_rq3_mixed_vs_server_only(fig6):
+    mk = {r.label: r.makespan for r in fig6}
+    best = min(r.makespan for r in fig6)
+    reduction = 1 - best / mk["Server only"]
+    assert 0.45 <= reduction <= 0.70, reduction  # paper: "by upto 57%"
+
+
+def test_fig7a_eft_close_to_etf(fig7):
+    a, b = fig7["eft"].makespan, fig7["etf"].makespan
+    assert abs(a - b) / max(a, b) < 0.10   # paper: "perform very closely"
+
+
+def test_fig7a_sophisticated_beat_rr(fig7):
+    for pol in ("eft", "etf"):
+        reduction = 1 - fig7[pol].makespan / fig7["rr"].makespan
+        assert 0.50 <= reduction <= 0.80, (pol, reduction)  # paper ≈ 0.57
+
+
+def test_fig7b_utilization_gain(fig7):
+    for pol in ("eft", "etf"):
+        delta = fig7[pol].mean_utilization - fig7["rr"].mean_utilization
+        assert 0.10 <= delta <= 0.45, (pol, delta)  # paper: "upto around 21%"
+
+
+def test_rq1_rq2_location_split(fig7):
+    """RQ1/RQ2: the EFT schedule uses BOTH tiers (neither pure offload nor
+    pure edge)."""
+    split = fig7["eft"].location_split
+    assert split.get("frontend", 0) > 0 and split.get("backend", 0) > 0
+
+
+def test_beyond_paper_policies_no_worse_than_rr():
+    res = {r.policy: r for r in sweep_policies(
+        ds_workload(), n_instances=20,
+        policies=("rr", "heft", "minmin", "vos", "etf_hwang"))}
+    for pol in ("heft", "minmin", "vos", "etf_hwang"):
+        assert res[pol].makespan < res["rr"].makespan

@@ -1,0 +1,172 @@
+"""Training layer: optimizers, grad-accum, checkpoints, fault tolerance."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.loader import LoaderConfig, TokenBatchLoader
+from repro.models import model as M
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (FailureEvent, FailureInjector,
+                                         RecoveryPolicy)
+from repro.train.optimizer import (OptConfig, _dq8, _q8, apply_updates,
+                                   init_opt_state, schedule)
+from repro.train.train_step import build_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = get_config("qwen3-0.6b", smoke=True)
+
+
+def _batch(B=4, S=16):
+    ld = TokenBatchLoader(LoaderConfig(batch_size=B, seq_len=S,
+                                       vocab_size=CFG.vocab_size, n_docs=32))
+    return {k: jnp.asarray(v) for k, v in next(iter(ld)).items()}
+
+
+@pytest.fixture(scope="module")
+def grads_and_params():
+    params = M.init(CFG, jax.random.PRNGKey(0))
+    batch = _batch()
+    (loss, _), grads = jax.jit(jax.value_and_grad(
+        lambda p: M.loss_fn(CFG, p, batch), has_aux=True))(params)
+    return params, grads, batch, float(loss)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor", "sgdm"])
+def test_optimizer_step_decreases_loss(name, grads_and_params):
+    params, grads, batch, loss0 = grads_and_params
+    oc = OptConfig(name=name, lr=1e-3, warmup_steps=1, total_steps=10)
+    st_ = init_opt_state(params, oc)
+    p2, _, stats = jax.jit(lambda p, g, s: apply_updates(p, g, s, oc))(
+        params, grads, st_)
+    loss1, _ = M.loss_fn(CFG, p2, batch)
+    assert float(loss1) < loss0
+    assert float(stats["grad_norm"]) > 0
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(schedule(oc, jnp.asarray(s))) for s in
+           (0, 5, 10, 55, 100, 200)]
+    assert lrs[1] == pytest.approx(0.5, rel=1e-3)       # mid-warmup
+    assert lrs[2] == pytest.approx(1.0, rel=1e-3)       # warmup done
+    assert lrs[2] > lrs[3] > lrs[4]                     # cosine decay
+    assert lrs[4] == pytest.approx(0.1, rel=1e-2)       # floor
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2000), scale=st.floats(1e-6, 1e3))
+def test_int8_block_quantization_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    q, s = _q8(x)
+    back = _dq8(q, s, (n,))
+    # per-block absmax scaling → error ≤ scale/2 per block
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.repeat(np.asarray(s)[:, 0] / 2 + 1e-9, 256)[:n]
+    assert (err <= bound + 1e-6).all()
+
+
+def test_grad_accum_equivalence():
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    st_ = init_train_state(CFG, oc, jax.random.PRNGKey(0))
+    batch = _batch(B=4)
+    s1, _ = jax.jit(build_train_step(CFG, oc, remat=False, grad_accum=1))(
+        st_, batch)
+    s2, _ = jax.jit(build_train_step(CFG, oc, remat=False, grad_accum=2))(
+        st_, batch)
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max())
+        if a.dtype != jnp.int8 else 0.0,
+        s1["params"], s2["params"])
+    assert max(jax.tree_util.tree_leaves(d)) < 1e-4
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.asarray(3, jnp.int32)}}
+        for step in (1, 2, 3):
+            mgr.save(step, tree)
+        assert mgr.all_steps() == [2, 3]                 # gc keeps 2
+        out = mgr.restore(tree, step=3)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert int(out["b"]["c"]) == 3
+
+
+def test_checkpoint_torn_write_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        tree = {"a": jnp.ones((2,), jnp.float32)}
+        mgr.save(5, tree)
+        # simulate a worker dying mid-save: directory without COMMITTED
+        os.makedirs(os.path.join(d, "step_00000009"))
+        assert mgr.latest_step() == 5
+        # and a stale tmp dir
+        os.makedirs(os.path.join(d, "step_00000011.tmp"))
+        assert mgr.latest_step() == 5
+
+
+def test_checkpoint_structure_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            mgr.restore({"a": jnp.ones((2,)), "b": jnp.ones((1,))})
+
+
+# -- fault tolerance -----------------------------------------------------------
+
+def _data():
+    while True:
+        ld = TokenBatchLoader(LoaderConfig(batch_size=4, seq_len=16,
+                                           vocab_size=CFG.vocab_size,
+                                           n_docs=64))
+        yield from ld
+
+
+def test_trainer_restarts_from_checkpoint_on_failure():
+    with tempfile.TemporaryDirectory() as d:
+        inj = FailureInjector([FailureEvent(step=7, worker="w1", kind="die")])
+        tr = Trainer(CFG, OptConfig(lr=1e-3, warmup_steps=2, total_steps=30),
+                     TrainerConfig(n_steps=12, ckpt_every=5, ckpt_dir=d,
+                                   log_every=100, n_workers=4),
+                     _data(), injector=inj)
+        out = tr.train()
+        assert out["restarts"] == 1
+        acts = out["recovery_log"]
+        assert acts[0].action == "restart_from_checkpoint"
+        assert acts[0].restored_step == 5
+        assert acts[0].plan.mesh_shape == {"data": 3, "model": 1}
+        # training completed to target despite the replay
+        assert out["history"][-1]["step"] == 12
+        assert out["history"][-1]["loss"] < out["history"][0]["loss"]
+
+
+def test_recovery_policy_straggler_exclusion():
+    pol = RecoveryPolicy(["w0", "w1", "w2", "w3"], devices_per_worker=2,
+                         model_axis=2)
+    act = None
+    for step in range(5):
+        act = pol.check_stragglers(
+            step, {"w0": 1.0, "w1": 1.0, "w2": 1.0, "w3": 4.0},
+            now=float(step), current_data_axis=4)
+        if act:
+            break
+    assert act is not None and act.action == "exclude_straggler"
+    assert act.plan.mesh_shape == {"data": 3, "model": 2}
+    # rejoin grows back
+    grow = pol.handle(10, FailureEvent(10, "w3", "rejoin"), 3)
+    assert grow.plan.mesh_shape == {"data": 4, "model": 2}

@@ -1,0 +1,84 @@
+"""VDC composition, elastic planning, health monitoring."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core.vdc import SLO, AllocationError, VDCManager
+from repro.core import elastic as el
+
+
+def test_vdc_compose_release_cycle():
+    mgr = VDCManager()
+    assert mgr.free_chips == mgr.total_chips == 1
+    v = mgr.compose("a", {"data": 1, "model": 1})
+    assert mgr.free_chips == 0
+    assert v.axis_sizes == {"data": 1, "model": 1}
+    with pytest.raises(AllocationError):
+        mgr.compose("b", {"data": 1})
+    with pytest.raises(AllocationError):
+        mgr.compose("a", {"data": 1})  # duplicate even if free
+    mgr.release("a")
+    assert mgr.free_chips == 1
+
+
+def test_vdc_slo_sizing_roofline():
+    mgr = VDCManager(devices=list(jax.devices()) * 64)  # fake pool of 64
+    slo = SLO(step_deadline_s=0.5)
+    # 1e15 flops: needs ≥ ~11 chips at 197 TF/s... sized to power of two
+    chips, terms = mgr.size_for_slo(slo, step_flops=1e15,
+                                    step_hbm_bytes=1e11)
+    assert terms.step_time <= 0.5
+    assert chips <= 64
+    # energy budget caps the size
+    slo2 = SLO(step_deadline_s=1e-9, energy_budget_w=250 * 4)
+    chips2, _ = mgr.size_for_slo(slo2, step_flops=1e15, step_hbm_bytes=1e11)
+    assert chips2 <= 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(devices=st.integers(1, 4096), model=st.integers(1, 64),
+       cur=st.integers(1, 64))
+def test_plan_remesh_properties(devices, model, cur):
+    if devices < model:
+        with pytest.raises(ValueError):
+            el.plan_remesh(devices, model, cur)
+        return
+    plan = el.plan_remesh(devices, model, cur)
+    assert plan.mesh_shape["model"] == model          # model axis preserved
+    assert plan.n_devices <= devices                  # never oversubscribe
+    assert plan.mesh_shape["data"] >= 1
+    # uses as many devices as divisibility allows
+    assert plan.n_devices > devices - model
+
+
+@settings(max_examples=50, deadline=None)
+@given(gb=st.integers(1, 4096), axis=st.integers(1, 64))
+def test_rebalance_batch_properties(gb, axis):
+    per, padded = el.rebalance_batch(gb, axis)
+    assert per * axis == padded
+    assert padded >= gb
+    assert padded - gb < axis                         # minimal padding
+
+
+def test_health_monitor_straggler_and_death():
+    mon = el.HealthMonitor(["a", "b", "c", "d"], patience=2,
+                           heartbeat_timeout=10.0)
+    for step in range(4):
+        for w in "abcd":
+            mon.observe(w, 2.5 if w == "d" else 1.0, now=float(step))
+        s = mon.stragglers()
+    assert s == ["d"]
+    mon.mark_dead("d")
+    assert mon.healthy() == ["a", "b", "c"]
+    assert mon.dead(now=100.0) == ["a", "b", "c"]     # all silent now
+
+
+def test_reshard_on_current_devices():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": np.ones((4, 4), np.float32)}
+    out = el.reshard(tree, mesh, lambda leaf: P())
+    assert np.asarray(out["w"]).sum() == 16
