@@ -1,0 +1,64 @@
+"""(Re)capture scheduler golden values into tests/golden_sched.json.
+
+    PYTHONPATH=src python benchmarks/capture_golden.py
+
+Writes exact makespan / mean-utilization / total-energy floats and a
+sha256 over the full assignment list for every policy at n=10 and n=100,
+plus an arrival-period run. The checked-in goldens were captured from the
+SEED (pre-incremental) engine and the incremental engine is pinned
+byte-identical to them — regenerate only when scheduling *semantics* are
+intentionally changed, and say so in the commit.
+"""
+import hashlib
+import json
+import sys
+import time
+
+from repro.core.cost_model import CostModel
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES
+from repro.core.simulator import run_instances
+from repro.pipeline.workloads import ds_workload
+
+
+def sched_digest(sched):
+    h = hashlib.sha256()
+    for a in sched.assignments:
+        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
+                       a.comm_wait, a.energy)).encode())
+    return h.hexdigest()
+
+
+def main():
+    out = {}
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    for n in (10, 100):
+        for pol in POLICIES:
+            t0 = time.perf_counter()
+            r = run_instances(wl, pool, cost, policy=pol, n_instances=n)
+            dt = time.perf_counter() - t0
+            out[f"{pol}_n{n}"] = {
+                "makespan": r.makespan,
+                "mean_utilization": r.mean_utilization,
+                "total_energy": r.total_energy,
+                "digest": sched_digest(r.schedule),
+                "seed_seconds": round(dt, 3),
+            }
+            print(f"{pol:10s} n={n:<4d} {dt:8.3f}s mk={r.makespan:.6f}")
+    # arrival-period regression (period > 0 exercises the arrival map)
+    r = run_instances(wl, pool, cost, policy="eft", n_instances=10, period=7.5)
+    out["eft_n10_period7.5"] = {
+        "makespan": r.makespan,
+        "mean_utilization": r.mean_utilization,
+        "total_energy": r.total_energy,
+        "digest": sched_digest(r.schedule),
+    }
+    with open("tests/golden_sched.json", "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print("wrote tests/golden_sched.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,7 @@
 Sections:
   fig6  — resource-pool configuration sweep (paper Fig. 6)
   fig7  — scheduling-policy sweep: exec time + mean utilisation (Fig. 7a/b)
+  sched — scheduler engine wall-time per policy (see benchmarks/bench_sched.py)
   beyond — beyond-paper policies (HEFT / MinMin / VoS / Hwang-ETF)
   vos   — system-wide Value-of-Service per policy (paper §3/§4.2.3)
   exec  — real execution of the scheduled 16-task workload (host vs device)
@@ -62,6 +63,25 @@ def bench_fig7(n_instances: int) -> None:
         row("fig7", f"{pol}_vs_rr_util_gain",
             f"{100 * (d[pol].mean_utilization - d['rr'].mean_utilization):.1f}",
             "pts")
+
+
+def bench_sched(quick: bool) -> None:
+    """Engine wall-time per policy (the perf trajectory for the incremental
+    scheduler); delegates to the micro-harness so numbers match
+    BENCH_sched.json."""
+    try:
+        from benchmarks import bench_sched as bs
+    except ImportError:
+        # script mode (`python benchmarks/run.py`): sys.path[0] is
+        # benchmarks/, not the repo root — load the sibling file directly
+        import importlib.util
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "bench_sched.py")
+        spec = importlib.util.spec_from_file_location("bench_sched", path)
+        bs = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(bs)
+    sizes = [20, 100] if quick else [100, 300]
+    bs.bench(sizes, ("rr", "etf", "eft", "heft", "minmin"))
 
 
 def bench_beyond_policies(n_instances: int) -> None:
@@ -198,11 +218,12 @@ def main(argv=None) -> int:
     ap.add_argument("--sections", default="all")
     args = ap.parse_args(argv)
     n = 20 if args.quick else 100
-    sections = (("fig6", "fig7", "beyond", "vos", "exec", "serve", "kern",
-                 "roofline") if args.sections == "all"
+    sections = (("fig6", "fig7", "sched", "beyond", "vos", "exec", "serve",
+                 "kern", "roofline") if args.sections == "all"
                 else tuple(args.sections.split(",")))
     t0 = time.perf_counter()
     fns = {"fig6": lambda: bench_fig6(n), "fig7": lambda: bench_fig7(n),
+           "sched": lambda: bench_sched(args.quick),
            "beyond": lambda: bench_beyond_policies(n),
            "vos": lambda: bench_vos(n), "exec": bench_execute,
            "serve": bench_serve, "kern": bench_kernels,

@@ -28,7 +28,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.dag import Task
 from repro.core.resources import ProcessingElement, ResourcePool
@@ -133,6 +135,54 @@ class CostModel:
         if src_pe.name == dst_pe.name:
             return 0.0
         return pool.transfer_time(src_pe.location, dst_pe.location, nbytes)
+
+    # -- vectorized tables (scheduler fast path) ------------------------------
+    def rate_matrix(self, pes: Sequence[ProcessingElement]
+                    ) -> Tuple[Tuple[str, ...], "np.ndarray"]:
+        """``(families, R)`` where ``R[f, j] = rate[family_f][pes[j].kind] *
+        pes[j].speed`` (work-units/second) and missing/non-positive entries
+        are NaN. Families are sorted for a stable row order."""
+        families = tuple(sorted(self.rate))
+        rows: List[List[float]] = []
+        for fam in families:
+            table = self.rate[fam]
+            row = []
+            for p in pes:
+                base = table.get(p.kind)
+                # NaN routes the engine to the scalar method, which raises
+                # (or misbehaves) exactly as the pre-batch code did — keeps
+                # scalar/batch behaviour identical for degenerate speeds too
+                row.append(base * p.speed
+                           if base is not None and base > 0 and p.speed > 0
+                           else float("nan"))
+            rows.append(row)
+        return families, np.asarray(rows, dtype=np.float64)
+
+    def exec_time_batch(self, tasks: Sequence[Task],
+                        pes: Sequence[ProcessingElement]) -> "np.ndarray":
+        """Dense ``(len(tasks), len(pes))`` exec-time table.
+
+        Bitwise-identical to calling :meth:`exec_time` per pair (same IEEE
+        ``work / (base * speed)`` on the same float64 operands); pairs with
+        no calibrated rate are NaN — callers must raise on use, matching the
+        scalar method's KeyError. Used by the incremental scheduling engine
+        so its inner loop is an array lookup, not dict-of-dict probes.
+        """
+        families, R = self.rate_matrix(pes)
+        fam_row = {f: i for i, f in enumerate(families)}
+        nan_row = len(families)
+        R = np.vstack([R, np.full((1, len(pes)), np.nan)])
+        fam_ids = np.asarray([fam_row.get(family(t.op), nan_row)
+                              for t in tasks], dtype=np.intp)
+        work = np.asarray([t.work for t in tasks], dtype=np.float64)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return work[:, None] / R[fam_ids, :]
+
+    def energy_batch(self, tasks: Sequence[Task],
+                     pes: Sequence[ProcessingElement]) -> "np.ndarray":
+        """Dense busy-energy table: ``exec_time_batch * power_busy``."""
+        power = np.asarray([p.power_busy for p in pes], dtype=np.float64)
+        return self.exec_time_batch(tasks, pes) * power[None, :]
 
     # -- energy ---------------------------------------------------------------
     def energy(self, task: Task, pe: ProcessingElement) -> float:

@@ -21,6 +21,26 @@ import dataclasses
 from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 
+@dataclasses.dataclass(frozen=True)
+class DAGIndex:
+    """Immutable int-id view of a :class:`PipelineDAG` snapshot.
+
+    The scheduling engine's inner loop works on dense integer ids instead of
+    name-keyed dicts: ``tasks[i]`` is the Task with id ``i``, ``preds[i]`` /
+    ``succs[i]`` are tuples of predecessor/successor ids, and ``topo`` lists
+    ids in the same deterministic topological order as
+    :meth:`PipelineDAG.topological_order`. Built once per DAG version via
+    :meth:`PipelineDAG.index` and cached until the DAG mutates.
+    """
+
+    tasks: Tuple[Task, ...]
+    names: Tuple[str, ...]
+    id_of: Dict[str, int]
+    preds: Tuple[Tuple[int, ...], ...]
+    succs: Tuple[Tuple[int, ...], ...]
+    topo: Tuple[int, ...]
+
+
 @dataclasses.dataclass
 class Task:
     """One node of a DS pipeline DAG.
@@ -64,6 +84,9 @@ class PipelineDAG:
         self._tasks: Dict[str, Task] = {}
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
+        self._version = 0
+        self._index: Optional[DAGIndex] = None
+        self._index_version = -1
 
     # -- construction -------------------------------------------------------
     def add_task(self, task: Task) -> Task:
@@ -72,6 +95,7 @@ class PipelineDAG:
         self._tasks[task.name] = task
         self._succ[task.name] = []
         self._pred[task.name] = []
+        self._version += 1
         return task
 
     def add_edge(self, src: str, dst: str) -> None:
@@ -81,11 +105,19 @@ class PipelineDAG:
             return
         self._succ[src].append(dst)
         self._pred[dst].append(src)
+        self._version += 1
         # cheap cycle guard: dst must not reach src
         if self._reaches(dst, src):
             self._succ[src].remove(dst)
             self._pred[dst].remove(src)
             raise ValueError(f"edge {src!r}->{dst!r} would create a cycle")
+
+    def _add_edge_unchecked(self, src: str, dst: str) -> None:
+        """Edge insert without the cycle DFS — for :meth:`instance`/:func:`merge`,
+        which copy edges of an already-acyclic graph and cannot create cycles."""
+        self._succ[src].append(dst)
+        self._pred[dst].append(src)
+        self._version += 1
 
     def chain(self, *names: str) -> None:
         for a, b in zip(names, names[1:]):
@@ -146,6 +178,22 @@ class PipelineDAG:
             raise ValueError("DAG contains a cycle")
         return out
 
+    def index(self) -> DAGIndex:
+        """Int-id adjacency snapshot (cached; rebuilt when the DAG mutates)."""
+        if self._index is None or self._index_version != self._version:
+            names = tuple(self._tasks)
+            id_of = {n: i for i, n in enumerate(names)}
+            self._index = DAGIndex(
+                tasks=tuple(self._tasks.values()),
+                names=names,
+                id_of=id_of,
+                preds=tuple(tuple(id_of[p] for p in self._pred[n]) for n in names),
+                succs=tuple(tuple(id_of[s] for s in self._succ[n]) for n in names),
+                topo=tuple(id_of[t.name] for t in self.topological_order()),
+            )
+            self._index_version = self._version
+        return self._index
+
     # -- analysis helpers used by schedulers ---------------------------------
     def upward_rank(self, exec_estimate: Callable[[Task], float],
                     comm_estimate: Callable[[Task], float]) -> Dict[str, float]:
@@ -173,17 +221,22 @@ class PipelineDAG:
             g.add_task(dataclasses.replace(t, name=f"{t.name}#{idx}"))
         for n, succ in self._succ.items():
             for s in succ:
-                g.add_edge(f"{n}#{idx}", f"{s}#{idx}")
+                g._add_edge_unchecked(f"{n}#{idx}", f"{s}#{idx}")
         return g
 
 
 def merge(dags: Iterable[PipelineDAG], name: str = "merged") -> PipelineDAG:
-    """Union several DAGs into one scheduling problem (no cross edges)."""
+    """Union several DAGs into one scheduling problem (no cross edges).
+
+    Inputs are acyclic and node-disjoint copies, so edges are inserted via
+    the unchecked fast path (the per-edge cycle DFS would be pure overhead
+    on 1k-instance merges).
+    """
     g = PipelineDAG(name=name)
     for d in dags:
         for t in d.tasks:
             g.add_task(t)
         for t in d.tasks:
             for s in d.successors(t.name):
-                g.add_edge(t.name, s.name)
+                g._add_edge_unchecked(t.name, s.name)
     return g

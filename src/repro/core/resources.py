@@ -71,6 +71,25 @@ class Link:
         return self.latency + nbytes / self.bandwidth
 
 
+@dataclasses.dataclass(frozen=True)
+class PoolIndex:
+    """Immutable int-id view of a :class:`ResourcePool`.
+
+    ``pes[j]`` is PE with id ``j`` (pool order — the order every policy scans
+    PEs in, so id order doubles as the deterministic tie-break order),
+    ``pe_location[j]`` its location string, ``loc_id`` maps location name →
+    dense location id, and ``links[(src_loc, dst_loc)]`` the directed Link.
+    """
+
+    pes: Tuple[ProcessingElement, ...]
+    idx_of: Dict[str, int]
+    pe_location: Tuple[str, ...]
+    pe_loc_id: Tuple[int, ...]
+    locations: Tuple[str, ...]
+    loc_id: Dict[str, int]
+    links: Dict[Tuple[str, str], Link]
+
+
 class ResourcePool:
     """A set of PEs + location-to-location links (one JITA-4DS VDC view)."""
 
@@ -86,6 +105,7 @@ class ResourcePool:
         for l in links:
             self._links[(l.src, l.dst)] = l
         self.intra_location_bandwidth = intra_location_bandwidth
+        self._index: Optional[PoolIndex] = None
 
     # -- lookups --------------------------------------------------------------
     def pe(self, name: str) -> ProcessingElement:
@@ -122,6 +142,23 @@ class ResourcePool:
         if l is None:
             raise KeyError(f"no link {src!r}->{dst!r}")
         return l.transfer_time(nbytes)
+
+    def index(self) -> PoolIndex:
+        """Int-id snapshot for the scheduling engine (cached; the PE list and
+        link matrix are effectively immutable after construction)."""
+        if self._index is None:
+            locations = tuple(self.locations)
+            loc_id = {l: i for i, l in enumerate(locations)}
+            self._index = PoolIndex(
+                pes=tuple(self.pes),
+                idx_of={p.name: j for j, p in enumerate(self.pes)},
+                pe_location=tuple(p.location for p in self.pes),
+                pe_loc_id=tuple(loc_id[p.location] for p in self.pes),
+                locations=locations,
+                loc_id=loc_id,
+                links=dict(self._links),
+            )
+        return self._index
 
     # -- composition ----------------------------------------------------------
     def subset(self, names: Iterable[str]) -> "ResourcePool":

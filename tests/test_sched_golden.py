@@ -1,0 +1,180 @@
+"""Engine-equivalence tests for the incremental scheduling engine.
+
+The golden values in ``tests/golden_sched.json`` were captured from the
+seed (pre-optimization) engine — regenerate only via
+``benchmarks/capture_golden.py`` and only if scheduling *semantics* are
+intentionally changed. Three layers of protection:
+
+  * golden aggregates: exact makespan / mean-utilization / total-energy
+    floats and a sha256 over the full assignment list, per policy, at
+    n=10 and n=100 (plus an arrival-period run);
+  * differential: the live engine vs the frozen reference engine
+    (:mod:`repro.core.schedulers_reference`) must produce byte-identical
+    assignment lists on random DAGs;
+  * determinism: two runs of the same problem give identical schedules.
+"""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG, Task
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES, schedule
+from repro.core.schedulers_reference import schedule_reference
+from repro.core.simulator import run_instances
+from repro.pipeline.workloads import ds_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
+
+
+def _digest(sched):
+    h = hashlib.sha256()
+    for a in sched.assignments:
+        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
+                       a.comm_wait, a.energy)).encode())
+    return h.hexdigest()
+
+
+def _assignment_tuples(sched):
+    return [(a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+            for a in sched.assignments]
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("n", [10, 100])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_golden_aggregates(golden, policy, n):
+    g = golden[f"{policy}_n{n}"]
+    r = run_instances(ds_workload(), paper_pool(), CostModel(),
+                      policy=policy, n_instances=n)
+    # exact equality on purpose: the incremental engine must be
+    # byte-identical to the seed, not merely approximately equal
+    assert r.makespan == g["makespan"]
+    assert r.mean_utilization == g["mean_utilization"]
+    assert r.total_energy == g["total_energy"]
+    assert _digest(r.schedule) == g["digest"]
+
+
+def test_golden_arrival_period(golden):
+    g = golden["eft_n10_period7.5"]
+    r = run_instances(ds_workload(), paper_pool(), CostModel(),
+                      policy="eft", n_instances=10, period=7.5)
+    assert r.makespan == g["makespan"]
+    assert r.mean_utilization == g["mean_utilization"]
+    assert r.total_energy == g["total_energy"]
+    assert _digest(r.schedule) == g["digest"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_determinism(policy):
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    a = run_instances(wl, pool, cost, policy=policy, n_instances=5)
+    b = run_instances(wl, pool, cost, policy=policy, n_instances=5)
+    assert (_assignment_tuples(a.schedule) == _assignment_tuples(b.schedule))
+
+
+def _random_dag(seed: int, n: int = 14) -> PipelineDAG:
+    rng = np.random.default_rng(seed)
+    g = PipelineDAG(f"rnd{seed}")
+    ops = ["ingest", "sql_transform", "kmeans", "summarize", "window_agg",
+           "linreg", "anomaly", "export"]
+    for i in range(n):
+        g.add_task(Task(f"t{i}", str(rng.choice(ops)),
+                        work=float(rng.uniform(0.5, 20)),
+                        out_bytes=float(rng.uniform(0, 4e6)),
+                        in_bytes=float(rng.uniform(0, 8e6)) if i < 2 else 0))
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, 2), replace=False):
+            g.add_edge(f"t{j}", f"t{i}")
+    return g
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_differential_vs_reference_engine(policy, seed):
+    """Live engine == frozen seed engine, assignment-for-assignment."""
+    dag = _random_dag(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    live = schedule(dag, pool, cost, policy=policy)
+    ref = schedule_reference(dag, pool, cost, policy=policy)
+    assert _assignment_tuples(live) == _assignment_tuples(ref)
+
+
+@pytest.mark.parametrize("policy", ["eft", "rr", "minmin"])
+def test_differential_with_arrivals(policy):
+    """Arrival maps (online submission) flow through both engines alike."""
+    dag = _random_dag(3)
+    arrival = {t.name: 2.5 * i for i, t in enumerate(dag.tasks)}
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    live = schedule(dag, pool, cost, policy=policy, arrival=arrival)
+    ref = schedule_reference(dag, pool, cost, policy=policy, arrival=arrival)
+    assert _assignment_tuples(live) == _assignment_tuples(ref)
+
+
+def test_differential_learned_cost_model():
+    """Subclassed cost models take the memoised scalar path — still exact."""
+    from repro.core.cost_model import LearnedCostModel
+    dag = _random_dag(5)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+
+    def trained():
+        m = LearnedCostModel(min_samples=2)
+        t = Task("k", "kmeans", work=10.0)
+        for pe in pool.pes:
+            for _ in range(3):
+                m.observe(t, pe, seconds=0.5)
+        return m
+
+    live = schedule(dag, pool, trained(), policy="eft")
+    ref = schedule_reference(dag, pool, trained(), policy="eft")
+    assert _assignment_tuples(live) == _assignment_tuples(ref)
+
+
+@pytest.mark.parametrize("policy", [p for p in POLICIES if p != "vos"])
+def test_empty_dag(policy):
+    """Empty problems schedule to an empty plan (vos excluded: it raises on
+    an empty rank table, in the seed engine too)."""
+    s = schedule(PipelineDAG(), paper_pool(), CostModel(), policy=policy)
+    assert s.assignments == [] and s.makespan == 0.0
+
+
+def test_vos_non_monotone_value_fn_rejected():
+    """A value curve that *increases* with finish time breaks the lazy
+    heap's monotone-key invariant — the engine must fail loud, not pick
+    wrong candidates silently."""
+    from repro.core.dag import merge
+    wl = ds_workload()
+    merged = merge([wl.instance(i) for i in range(3)])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        schedule(merged, paper_pool(), CostModel(), policy="vos",
+                 value_fn=lambda t, f: f)
+
+
+def test_schedule_assignment_lookup_cached():
+    """Schedule.assignment() is dict-backed and consistent with the list."""
+    r = run_instances(ds_workload(), paper_pool(), CostModel(),
+                      policy="eft", n_instances=3)
+    s = r.schedule
+    for a in s.assignments:
+        assert s.assignment(a.task) is a
+    with pytest.raises(KeyError):
+        s.assignment("no_such_task")
+    # cache invalidates when the assignment list grows
+    extra = s.assignments[0].__class__(
+        "ghost", "export", s.assignments[0].pe, 0.0, 1.0, 0.0, 0.0)
+    s.assignments.append(extra)
+    assert s.assignment("ghost") is extra
