@@ -207,6 +207,25 @@ class CostModel:
         return acc / max(n, 1)
 
 
+def row_ids(table: "np.ndarray") -> List[int]:
+    """Dense row-identity ids for a per-(task, PE) cost table.
+
+    ``row_ids(E)[i] == row_ids(E)[k]`` iff tasks ``i`` and ``k`` have
+    bit-identical cost rows (NaN included — missing rates compare equal to
+    missing rates, never to real values). Two tasks with equal exec/energy
+    rows are indistinguishable to every scheduling-policy key except for
+    their name tie-break, which is what lets the incremental engine fold
+    them into one candidate class. O(V·P) hashing, done once per engine."""
+    mat = np.ascontiguousarray(table, dtype=np.float64)
+    width = mat.shape[1] * mat.itemsize
+    if width == 0:  # no PEs: every (empty) row is identical
+        return [0] * mat.shape[0]
+    seen: Dict[bytes, int] = {}
+    raw = mat.tobytes()
+    return [seen.setdefault(raw[off:off + width], len(seen))
+            for off in range(0, len(raw), width)]
+
+
 # ---------------------------------------------------------------------------
 # Learned cost model (paper refs [20-23]: regression-based prediction)
 # ---------------------------------------------------------------------------

@@ -88,6 +88,39 @@ class PoolIndex:
     locations: Tuple[str, ...]
     loc_id: Dict[str, int]
     links: Dict[Tuple[str, str], Link]
+    #: PE ids grouped by location id — ``loc_pes[loc_id]`` is the tuple of
+    #: ``pj`` at that location (pool order). The scheduling engine uses this
+    #: to dirty exactly the PEs whose transfer horizons a link booking moved.
+    loc_pes: Tuple[Tuple[int, ...], ...] = ()
+
+
+class DirtyHorizons:
+    """Per-PE staleness epochs for incremental schedulers.
+
+    A scheduler placement moves at most (a) one PE's ``pe_free`` horizon and
+    (b) the link horizons into the placed PE's *location*. Candidate keys
+    cached against PE ``pj`` stay exact until one of those moves; this
+    helper tracks that with a monotonically increasing epoch per PE — a
+    cached value tagged with ``epoch(pj)`` is still valid iff the epoch is
+    unchanged. O(1) per bump (location bumps are O(PEs at location)).
+    """
+
+    __slots__ = ("_epoch", "_loc_pes")
+
+    def __init__(self, index: PoolIndex) -> None:
+        self._epoch = [0] * len(index.pes)
+        self._loc_pes = index.loc_pes
+
+    def epoch(self, pj: int) -> int:
+        return self._epoch[pj]
+
+    def bump_pe(self, pj: int) -> None:
+        self._epoch[pj] += 1
+
+    def bump_location(self, loc_id: int) -> None:
+        ep = self._epoch
+        for pj in self._loc_pes[loc_id]:
+            ep[pj] += 1
 
 
 class ResourcePool:
@@ -149,14 +182,19 @@ class ResourcePool:
         if self._index is None:
             locations = tuple(self.locations)
             loc_id = {l: i for i, l in enumerate(locations)}
+            pe_loc_id = tuple(loc_id[p.location] for p in self.pes)
+            loc_pes = tuple(
+                tuple(j for j, l in enumerate(pe_loc_id) if l == li)
+                for li in range(len(locations)))
             self._index = PoolIndex(
                 pes=tuple(self.pes),
                 idx_of={p.name: j for j, p in enumerate(self.pes)},
                 pe_location=tuple(p.location for p in self.pes),
-                pe_loc_id=tuple(loc_id[p.location] for p in self.pes),
+                pe_loc_id=pe_loc_id,
                 locations=locations,
                 loc_id=loc_id,
                 links=dict(self._links),
+                loc_pes=loc_pes,
             )
         return self._index
 

@@ -27,7 +27,7 @@ The seed engine (frozen as :mod:`repro.core.schedulers_reference`) rescanned
 every (ready task, PE) pair per placement and recomputed ``ready_at`` /
 ``exec_start`` / ``exec_time`` from scratch: O(V · |ready| · |PE| · deg)
 overall, ~3.5 s for the paper's 100-instance sweep and quadratic growth
-beyond it. This engine is incremental, built on three observations about the
+beyond it. This engine is incremental, built on four observations about the
 list-scheduling state:
 
 1. **Monotone candidate keys.** A placement only ever *raises* scheduler
@@ -40,31 +40,51 @@ list-scheduling state:
    Min-Min's ``(finish, name, pe)``, VoS's ``(-value_rate, finish, ...)``
    with a value curve non-increasing in finish time — is non-decreasing
    over the run for a fixed (task, PE) pair.
-2. **Lazy best-candidate heap.** Monotonicity makes a stale-tolerant heap
-   exact: pop the minimum stored key, recompute the key against current
-   state, and accept iff unchanged — a stale entry (stored key < current)
-   is pushed back with its refreshed key. Because stale keys are always
-   *lower* bounds, the first entry that validates is the true minimum, and
-   the trailing (name, pe-index) components reproduce the reference
-   engine's first-wins scan order exactly (byte-identical schedules).
-3. **Indexed state.** Tasks and PEs are dense int ids
+2. **Lazy best-candidate selection.** Monotonicity makes stale-tolerant
+   structures exact: every stored key is a *lower bound* of the current
+   key, so the first surfaced candidate that validates against live state
+   is the true minimum, and the trailing (name, pe-index) key components
+   reproduce the reference engine's first-wins scan order exactly
+   (byte-identical schedules).
+3. **Candidate classes + offset sub-heaps** (:class:`_ClassedBest`).
+   Ready tasks with identical (cost rows, rank), frozen ``ready_at`` and
+   transfer-plan signature are interchangeable up to the name tie-break:
+   one *class* holds them in a name-ordered heap and only the head
+   carries heap entries (an n-instance merge collapses each template task
+   to one class per distinct ready time). Per (class, PE) the key is
+   stored in whichever of three forms is exact (see
+   :class:`_ClassedBest`): a per-PE offset heap (``pe_free + static``), a
+   per-(PE, link) joint-base offset heap (``max(link_free, pe_free) +
+   static``), or a global absolute lazy heap. Offset-heap order is
+   invariant under horizon advances, so membership never needs
+   revalidation — a placement re-materialises O(1) roots instead of
+   cascading through O(|ready|) stale entries.
+4. **Indexed state.** Tasks and PEs are dense int ids
    (:meth:`repro.core.dag.PipelineDAG.index`,
    :meth:`repro.core.resources.ResourcePool.index`); per-(task, PE) exec
    time and energy come from NumPy-built tables
    (:meth:`repro.core.cost_model.CostModel.exec_time_batch`) materialised
-   as plain-float rows; per-(task, location) transfer plans — (link, dur)
-   lists covering the raw-input upload and cross-location predecessor
-   pulls — are cached when a task's predecessors are placed, so one key
-   evaluation is O(deg) float ops, with no dict-of-dict or attribute
-   chases.
+   as plain-float rows, with bitwise row-identity ids
+   (:func:`repro.core.cost_model.row_ids`) feeding class signatures;
+   per-(task, location) transfer plans — (link, dur) lists covering the
+   raw-input upload and cross-location predecessor pulls — are cached
+   when a task's predecessors are placed, so one key evaluation is O(deg)
+   float ops, with no dict-of-dict or attribute chases.
 
-Per placement the engine does O(|PE| · log H) heap work for the newly
-readied successors plus O(k) revalidations of candidates whose PE/link
-actually moved (k is typically ≪ |ready| · |PE|), making the paper's
-100-instance sweep ~10–30× faster and 1000-instance sweeps tractable.
-Differential tests (`tests/test_sched_golden.py`) pin byte-identical
-assignment lists against the frozen reference engine and golden aggregates
-captured from the seed.
+Per-placement cost by engine generation (V tasks, P PEs, EFT on the paper
+workload, wall-clock for the full n-instance sweep on one core):
+
+    engine                      per placement            n=100   n=1000  n=3000
+    seed (reference)            O(|ready| · P · deg)     3.5 s   ~45 min    —
+    PR 1 flat lazy heap         O(k stale revalidations,
+                                k ≈ |ready| at scale)    0.24 s  31 s       —
+    PR 2 classes + offset heaps O(#newly-ready + log)    0.1 s   1.4 s   4.6 s
+
+Differential tests (`tests/test_sched_golden.py`,
+`tests/test_sched_classes.py`) pin byte-identical assignment lists against
+the frozen reference engine and golden aggregates captured from the seed;
+`benchmarks/bench_sched.py --check-golden` gates CI on both exactness and
+wall-time regressions.
 """
 
 from __future__ import annotations
@@ -75,9 +95,9 @@ import heapq
 import itertools
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, row_ids
 from repro.core.dag import PipelineDAG, Task
-from repro.core.resources import ProcessingElement, ResourcePool
+from repro.core.resources import DirtyHorizons, ProcessingElement, ResourcePool
 
 POLICIES = ("rr", "etf", "etf_hwang", "eft", "heft", "minmin", "vos")
 
@@ -250,17 +270,29 @@ class _Engine:
         # preserved.
         self._exec_tbl: Optional[List[List[float]]] = None
         self._energy_tbl: Optional[List[List[float]]] = None
+        #: per-task cost-row identity (tasks with bitwise-equal exec/energy
+        #: rows share an id) — the class-grouping selector keys off these;
+        #: None (subclassed cost model) disables grouping, never correctness
+        self._exec_row_ids: Optional[List[int]] = None
+        self._energy_row_ids: Optional[List[int]] = None
         if type(cost).exec_time is CostModel.exec_time:
             E = cost.exec_time_batch(di.tasks, pi.pes)
             self._exec_tbl = E.tolist()
+            self._exec_row_ids = row_ids(E)
             if type(cost).energy is CostModel.energy:
                 # same broadcast as energy_batch, reusing the built table
                 import numpy as np
                 power = np.asarray([p.power_busy for p in pi.pes],
                                    dtype=np.float64)
-                self._energy_tbl = (E * power[None, :]).tolist()
+                En = E * power[None, :]
+                self._energy_tbl = En.tolist()
+                self._energy_row_ids = row_ids(En)
         self._exec_memo: Dict[int, float] = {}
         self._energy_memo: Dict[int, float] = {}
+        #: per-PE staleness epochs: bumped when a placement moves pe_free or
+        #: books transfers into a PE's location — cached candidate keys
+        #: tagged with an older epoch must be recomputed, newer ones are exact
+        self.dirty = DirtyHorizons(pi)
 
         self._arr = [self.arrival.get(nm, 0.0) for nm in di.names]
         self._pe_free: List[float] = [0.0] * self.n_pes
@@ -350,6 +382,26 @@ class _Engine:
             row[tid] = pl = tuple(entries)
         return pl
 
+    def class_plan_sig(self, tid: int) -> Tuple:
+        """Location-independent identity of ``tid``'s transfer needs.
+
+        Two ready tasks with equal signatures get identical :meth:`_plan`
+        tuples at *every* destination location: the raw-input upload depends
+        only on ``in_bytes`` and the cross-location pulls only on the
+        (source location, out_bytes) sequence of placed predecessors (edge
+        order — the order bookings are charged in). Callable once a task is
+        ready (all predecessors placed); frozen from then on."""
+        di = self._di
+        placed = self._placed
+        loc = self._pi.pe_loc_id
+        tasks = di.tasks
+        parts = []
+        for p in di.preds[tid]:
+            ob = tasks[p].out_bytes
+            if ob > 0:
+                parts.append((loc[placed[p]], ob))
+        return (tasks[tid].in_bytes, tuple(parts))
+
     # -- timing queries (int-id fast path) ------------------------------------
     def _ready_at_i(self, tid: int) -> float:
         r = self._ready_at[tid]
@@ -400,15 +452,19 @@ class _Engine:
         t = hold
         plan = self._plan(tid, self._pi.pe_location[pj])
         if self.contended_links:
-            lf = self.link_free
-            for key, dur in plan:
-                s = lf.get(key, 0.0)
-                if s < hold:
-                    s = hold
-                a = s + dur
-                lf[key] = a
-                if a > t:
-                    t = a
+            if plan:
+                lf = self.link_free
+                for key, dur in plan:
+                    s = lf.get(key, 0.0)
+                    if s < hold:
+                        s = hold
+                    a = s + dur
+                    lf[key] = a
+                    if a > t:
+                        t = a
+                # every booked link points at this PE's location, so only
+                # candidates on PEs there can have gone stale
+                self.dirty.bump_location(self._pi.pe_loc_id[pj])
         else:
             for _key, dur in plan:
                 a = hold + dur
@@ -419,6 +475,19 @@ class _Engine:
     def _eft_i(self, tid: int, pj: int) -> float:
         hold = self._est_i(tid, pj)
         return self._exec_start_i(tid, pj, hold) + self._exec(tid, pj)
+
+    def _off_base(self, tid: int, pj: int) -> float:
+        """Static part of the saturated-regime finish time: whenever
+        ``ready_at(tid) ≤ pe_free[pj]`` and every link in the task's plan is
+        free by ``pe_free[pj]``, ``finish = pe_free[pj] + _off_base`` —
+        transfers all start at the hold and overlap, so only the longest
+        one delays execution. Exec times and plan durations are static per
+        (task, PE), which is what makes offset sub-heap order permanent."""
+        d = 0.0
+        for _lk, dur in self._plan(tid, self._pi.pe_location[pj]):
+            if dur > d:
+                d = dur
+        return d + self._exec(tid, pj)
 
     def _finish_fn(self) -> Callable[[int, int], float]:
         """Closure computing ``eft(tid, pj)`` with all state pre-bound — the
@@ -500,6 +569,7 @@ class _Engine:
         self.assignments.append(a)
         if f > self._pe_free[pj]:
             self._pe_free[pj] = f
+            self.dirty.bump_pe(pj)
         self._finish[tid] = f
         self._placed[tid] = pj
         try:
@@ -579,62 +649,441 @@ class _Engine:
         return Schedule(self.assignments, self.pool, policy)
 
 
-class _LazyBest:
-    """Lazy best-(task, PE) heap with recompute-on-pop validation.
+_MONOTONE_ERR = (
+    "candidate key decreased between evaluations; scheduling "
+    "keys must be non-decreasing over the run (for VoS: "
+    "value_fn must be non-increasing in finish time)")
 
-    Exact under the monotone-key invariant (module docstring): stored keys
-    are lower bounds of current keys, so the first popped entry whose
-    recomputed key equals its stored key is the true minimum. Keys must end
-    with (task name, pe index) so ties reproduce the reference engine's
-    first-wins scan order.
+
+class _CandidateClass:
+    """One equivalence class of interchangeable ready tasks.
+
+    Members share the policy signature (cost rows, rank, ...), the frozen
+    ``ready_at`` and the transfer-plan signature, so every policy key is
+    identical across members on every PE except its task-name tie-break.
+    ``members`` is a (name, tid) min-heap — the reference engine breaks key
+    ties by ascending task name, so the heap head is always the one member
+    the reference scan would pick. ``gen`` is bumped when a late joiner
+    undercuts the head name (heap entries stamped with an older gen are
+    discarded on surfacing; fresh ones are pushed at bump time)."""
+
+    __slots__ = ("members", "gen", "sig", "cid")
+
+    def __init__(self, sig: Tuple, cid: int) -> None:
+        self.members: List[Tuple[str, int]] = []
+        self.gen = 0
+        self.sig = sig
+        self.cid = cid
+
+
+class _ClassedBest:
+    """Best-(task, PE) selector: candidate classes × per-PE offset sub-heaps.
+
+    Replaces PR 1's flat lazy heap, which held one entry per (ready task,
+    PE) pair and revalidated ~O(|ready|) stale candidates per placement once
+    thousands of instance tasks piled up in the ready set. Three structural
+    changes:
+
+      * **Candidate classes** (:class:`_CandidateClass`): only the head of
+        each class carries heap entries; the other members wait in the
+        class's name-ordered heap. Tasks replicated across instances with
+        equal (cost rows, rank), ``ready_at`` and transfer-plan signature
+        are interchangeable up to the name tie-break.
+      * **Per-PE offset sub-heaps** (``_offs[j]``): the dominant regime at
+        scale is *saturation* — a candidate whose frozen ``ready_at`` is
+        already below ``pe_free[j]`` and whose plan links are idle has
+
+            key = pe_free[j] + (max transfer dur + exec time) = F_j + offset
+
+        with a **static** offset. Sub-heap ``j`` stores those offsets
+        directly, so advancing ``F_j`` shifts every key equally and the heap
+        order never goes stale: a placement costs O(1) re-advertisement of
+        the root instead of an O(|ready|) revalidation cascade. Keys are
+        materialised (``offset + F_j``) only at the root, on demand.
+      * **Absolute-key lazy heap + top-level heap-of-heaps**: candidates not
+        in offset form — the ready *frontier* (``ready_at > pe_free``, keys
+        static in ``ready_at``) and link-bound candidates (a booked link
+        horizon overtook the PE) — live in one global lazy heap ``_abs``
+        with PR 1's recompute-on-surface validation (O(1)-skipped when the
+        PE's :class:`repro.core.resources.DirtyHorizons` epoch is clean).
+        Entries migrate lazily to offset form when the horizons cross, at
+        most once per crossing. The top heap ranks lower-bound
+        advertisements of every sub-structure root.
+
+    Exactness argument (extends the module-docstring invariant): every
+    stored key/offset is a lower bound of the candidate's true key — true
+    keys are monotone in engine state, ``finish ≥ base + offset`` holds for
+    both bases, and a class head only ever advances to a lexically larger
+    name (gen-bumps re-push eagerly in the one case it doesn't). Every
+    advert is ≤ its sub-structure's stored root. So when the top minimum
+    validates (offset root: regime checks pass and the rematerialised key
+    equals the advert; abs root: epoch-clean or recomputed equal), it is ≤
+    every true key — the exact candidate the reference engine's first-wins
+    scan picks.
     """
 
-    __slots__ = ("_eng", "_key", "_heap")
+    __slots__ = ("_eng", "_key", "_sig", "_off", "_shift", "_needs_f",
+                 "_classes", "_by_sig", "_offs", "_links", "_abs", "_top",
+                 "_adv")
 
-    def __init__(self, eng: _Engine,
-                 keyfn: Callable[[int, int], Tuple]) -> None:
+    def __init__(self, eng: _Engine, keyfn: Callable[[int, int], Tuple],
+                 sigfn: Optional[Callable[[int], Tuple]] = None,
+                 offfn: Optional[Callable[[int, int, float], Optional[Tuple]]]
+                 = None,
+                 shift: Tuple[int, ...] = (2,)) -> None:
         self._eng = eng
         self._key = keyfn
-        self._heap: List[Tuple] = []
+        self._sig = sigfn
+        #: offfn(tid, pj, base) → static offset key components for a
+        #: candidate whose key is exactly ``comps`` shifted by the base
+        #: horizons per ``shift`` (None: not representable — e.g. VoS below
+        #: the hard deadline, where the value curve is nonlinear in finish).
+        #: offfn=None disables offset form entirely (custom VoS curves).
+        self._off = offfn
+        #: per-component base codes for materialisation: 0 = static,
+        #: 1 = pe_free[pj], 2 = the heap's base (pe_free for F-heaps,
+        #: max(link_free, pe_free) for joint-base heaps). EFT/Min-Min:
+        #: (2,); Hwang ETF: (1, 2) — its leading hold component rides
+        #: pe_free only; VoS past the hard deadline: (0, 2).
+        self._shift = shift
+        #: a pe_free-coded component constrains the joint-base regime:
+        #: hold = pe_free requires ready_at ≤ pe_free, not just ≤ the base
+        self._needs_f = 1 in shift
+        self._classes: List[_CandidateClass] = []
+        self._by_sig: Dict[Tuple, _CandidateClass] = {}
+        #: per-PE offset sub-heaps of (comps+(head_name,), cid, gen, head_tid)
+        self._offs: List[List[Tuple]] = [[] for _ in range(eng.n_pes)]
+        #: per-link offset heaps (entries from every PE of the destination
+        #: location): (comps+(head_name, pj), cid, gen, head_tid, pj)
+        self._links: Dict[Tuple[str, str], List[Tuple]] = {}
+        #: global absolute lazy heap of (key, cid, gen, epoch, head_tid, pj)
+        self._abs: List[Tuple] = []
+        #: (root lower-bound key, tag) adverts; tag = pj int for _offs[pj],
+        #: link key for _links, -1 for _abs. Equal advert keys imply the
+        #: same candidate, hence the same tag — tags never tie-compare
+        #: across types. Superseded adverts are skipped via _adv identity.
+        self._top: List[Tuple] = []
+        #: latest advertised key object per tag
+        self._adv: Dict[object, Optional[Tuple]] = {}
+
+    # -- regime classification ------------------------------------------------
+    #
+    # For a candidate (tid, pj) with frozen r = ready_at, F = pe_free[pj],
+    # and a transfer plan whose entries all ride one link with horizon lf
+    # (multi-link plans need ≥3 locations; with 2-location pools every plan
+    # entry targets loc(pj) over the single inbound link):
+    #
+    #   finish = max(lf, r, F) + maxdur + exec
+    #
+    #   * plan-free, r ≤ F:            finish = F            + exec
+    #   * single link, r ≤ max(lf,F):  finish = max(lf, F) + maxdur + exec
+    #   * else (frontier / multi-link / no offfn): absolute key, lazy heap
+    #
+    # Both bases (F, and the joint base max(lf, F)) are monotone
+    # non-decreasing and r is frozen, so once a candidate enters an offset
+    # heap its membership condition holds forever — offset entries are
+    # NEVER evicted or revalidated, and advancing a base costs O(1)
+    # (re-materialise the root) instead of an O(|ready|) cascade.
+
+    def _classify(self, tid: int, pj: int, r: float):
+        """Return ``(0, None)`` (F-offset), ``(1, link_key)`` (joint-base
+        offset) or ``(2, None)`` (absolute) for the candidate's form."""
+        eng = self._eng
+        f = eng._pe_free[pj]
+        lk0 = None
+        lmax = 0.0
+        lf_get = eng.link_free.get
+        for lk, _dur in eng._plan(tid, eng._pi.pe_location[pj]):
+            if lk0 is None:
+                lk0 = lk
+            elif lk != lk0:
+                return 2, None  # multi-link: not offset-representable
+            v = lf_get(lk, 0.0)
+            if v > lmax:
+                lmax = v
+        if lk0 is None:
+            return (0, None) if r <= f else (2, None)
+        if self._needs_f:
+            # Hwang: leading component is hold = F, so r ≤ F is required
+            if r <= f:
+                return 1, lk0
+        elif r <= f or r <= lmax:
+            # finish-led key: base = max(lf, F) bounds r
+            return 1, lk0
+        return 2, None
+
+    def _mat(self, pj: int, comps: Tuple) -> Tuple:
+        """Materialise F-offset comps into the candidate's true full key."""
+        f = self._eng._pe_free[pj]
+        shift = self._shift
+        n = len(shift)
+        return tuple(c + f if i < n and shift[i] else c
+                     for i, c in enumerate(comps)) + (pj,)
+
+    def _mat_l(self, pj: int, lk: Tuple[str, str], comps: Tuple) -> Tuple:
+        """Materialise joint-base offset comps into the true full key."""
+        eng = self._eng
+        f = eng._pe_free[pj]
+        b = eng.link_free.get(lk, 0.0)
+        if b < f:
+            b = f
+        shift = self._shift
+        n = len(shift)
+        return tuple(c + (f if shift[i] == 1 else b) if i < n and shift[i]
+                     else c for i, c in enumerate(comps)) + (pj,)
+
+    def _advertise_off(self, pj: int, force: bool = False) -> None:
+        sub = self._offs[pj]
+        if not sub:
+            self._adv[pj] = None
+            return
+        k = self._mat(pj, sub[0][0])
+        cur = self._adv.get(pj)
+        if force or cur is None or k < cur:
+            self._adv[pj] = k
+            heapq.heappush(self._top, (k, pj))
+
+    def _advertise_link(self, tag: Tuple[int, Tuple[str, str]],
+                        force: bool = False) -> None:
+        sub = self._links[tag]
+        if not sub:
+            self._adv[tag] = None
+            return
+        k = self._mat_l(tag[0], tag[1], sub[0][0])
+        cur = self._adv.get(tag)
+        if force or cur is None or k < cur:
+            self._adv[tag] = k
+            heapq.heappush(self._top, (k, tag))
+
+    def _advertise_abs(self, force: bool = False) -> None:
+        if not self._abs:
+            self._adv[-1] = None
+            return
+        k = self._abs[0][0]
+        cur = self._adv.get(-1)
+        if force or cur is None or k < cur:
+            self._adv[-1] = k
+            heapq.heappush(self._top, (k, -1))
+
+    def _push_entry(self, cls: _CandidateClass, name: str, tid: int,
+                    pj: int) -> None:
+        """Insert the class-head candidate for PE ``pj`` into whichever
+        sub-structure currently represents its key exactly (offset forms)
+        or as a lazy lower bound (absolute heap)."""
+        eng = self._eng
+        comps = None
+        if self._off is not None:
+            regime, lk = self._classify(tid, pj, eng._ready_at[tid])
+            if regime == 0:
+                comps = self._off(tid, pj, eng._pe_free[pj])
+            elif regime == 1:
+                b = eng.link_free.get(lk, 0.0)
+                f = eng._pe_free[pj]
+                comps = self._off(tid, pj, b if b > f else f)
+        if comps is None:
+            heapq.heappush(self._abs, (self._key(tid, pj), cls.cid, cls.gen,
+                                       eng.dirty.epoch(pj), tid, pj))
+            self._advertise_abs()
+        elif regime == 0:
+            heapq.heappush(self._offs[pj],
+                           (comps + (name,), cls.cid, cls.gen, tid))
+            self._advertise_off(pj)
+        else:
+            tag = (pj, lk)
+            sub = self._links.get(tag)
+            if sub is None:
+                sub = self._links[tag] = []
+            heapq.heappush(sub, (comps + (name,), cls.cid, cls.gen, tid))
+            self._advertise_link(tag)
+
+    def _push_class(self, cls: _CandidateClass) -> None:
+        """(Re)insert entries for the class's current head on every PE."""
+        name, head_tid = cls.members[0]
+        for pj in range(self._eng.n_pes):
+            self._push_entry(cls, name, head_tid, pj)
 
     def push_ready(self) -> None:
-        """Add candidates for every task that became ready since last call."""
+        """Fold every task that became ready since the last call into its
+        candidate class (creating classes — and their heap entries — only
+        for signatures with no live class)."""
         eng = self._eng
-        key = self._key
-        heap = self._heap
-        n_pes = eng.n_pes
-        for tid in eng.take_newly_ready():
-            for pj in range(n_pes):
-                heapq.heappush(heap, (key(tid, pj), tid, pj))
+        newly = eng.take_newly_ready()
+        if not newly:
+            return
+        sigfn = self._sig
+        names = eng._di.names
+        ready_at = eng._ready_at_i
+        plan_sig = eng.class_plan_sig
+        by_sig = self._by_sig
+        created: List[_CandidateClass] = []
+        created_ids: set = set()
+        demoted: Dict[int, _CandidateClass] = {}
+        for tid in newly:
+            psig = sigfn(tid) if sigfn is not None else tid
+            sig = (psig, ready_at(tid), plan_sig(tid))
+            cls = by_sig.get(sig)
+            if cls is None:
+                cls = _CandidateClass(sig, len(self._classes))
+                cls.members.append((names[tid], tid))
+                by_sig[sig] = cls
+                self._classes.append(cls)
+                created.append(cls)
+                created_ids.add(cls.cid)
+            else:
+                m = cls.members
+                heapq.heappush(m, (names[tid], tid))
+                if m[0][1] == tid and cls.cid not in created_ids:
+                    # late joiner undercut the head name: existing entries
+                    # (keyed on the old, larger name) are no longer lower
+                    # bounds — retire them via gen and re-push fresh ones
+                    demoted[cls.cid] = cls
+        for cls in created:
+            self._push_class(cls)
+        for cls in demoted.values():
+            cls.gen += 1
+            self._push_class(cls)
+
+    def _accept(self, cls: _CandidateClass) -> None:
+        """A class member was chosen: advance the head (name-heap pop)."""
+        members = cls.members
+        heapq.heappop(members)
+        if not members:
+            del self._by_sig[cls.sig]
+
+    def _pop_off(self, k: Tuple, pj: int) -> Optional[Tuple[int, int]]:
+        """Process a surfaced F-offset-sub-heap advert; None means 'fixed
+        something, rescan the top'."""
+        sub = self._offs[pj]
+        comps, cid, gen, head_tid = sub[0]
+        cls = self._classes[cid]
+        members = cls.members
+        if gen != cls.gen or not members:
+            heapq.heappop(sub)  # retired gen / exhausted class
+            self._advertise_off(pj, force=True)
+            return None
+        name, tid = members[0]
+        if tid != head_tid:
+            # head advanced to a larger name: re-key the entry in place
+            heapq.heapreplace(sub, (comps[:-1] + (name,), cid, gen, tid))
+            self._advertise_off(pj, force=True)
+            return None
+        cur = self._mat(pj, comps)
+        if cur != k:
+            # pe_free advanced since this advert; re-advertise at the
+            # current materialisation (heap order is unaffected)
+            self._advertise_off(pj, force=True)
+            return None
+        self._accept(cls)
+        if not members:
+            heapq.heappop(sub)
+        self._advertise_off(pj, force=True)
+        return tid, pj
+
+    def _pop_link(self, k: Tuple, tag: Tuple[int, Tuple[str, str]]
+                  ) -> Optional[Tuple[int, int]]:
+        """Process a surfaced joint-base offset-heap advert. Membership is
+        permanent (r ≤ max(lf, F) can never un-hold), so the only fix-ups
+        are head advances and base advances — never eviction."""
+        sub = self._links[tag]
+        comps, cid, gen, head_tid = sub[0]
+        cls = self._classes[cid]
+        members = cls.members
+        if gen != cls.gen or not members:
+            heapq.heappop(sub)
+            self._advertise_link(tag, force=True)
+            return None
+        name, tid = members[0]
+        if tid != head_tid:
+            heapq.heapreplace(sub, (comps[:-1] + (name,), cid, gen, tid))
+            self._advertise_link(tag, force=True)
+            return None
+        cur = self._mat_l(tag[0], tag[1], comps)
+        if cur != k:
+            # a base horizon advanced since this advert
+            self._advertise_link(tag, force=True)
+            return None
+        self._accept(cls)
+        if not members:
+            heapq.heappop(sub)
+        self._advertise_link(tag, force=True)
+        return tid, tag[0]
+
+    def _pop_abs(self, k: Tuple) -> Optional[Tuple[int, int]]:
+        """Process a surfaced absolute-heap advert (PR 1's lazy validation,
+        plus lazy migration into offset form when horizons crossed)."""
+        eng = self._eng
+        heap = self._abs
+        ek, cid, gen, epoch, head_tid, pj = heap[0]
+        cls = self._classes[cid]
+        members = cls.members
+        if gen != cls.gen or not members:
+            heapq.heappop(heap)
+            self._advertise_abs(force=True)
+            return None
+        name, tid = members[0]
+        cur_ep = eng.dirty.epoch(pj)
+        if tid == head_tid and epoch == cur_ep:
+            # epoch-clean: nothing affecting this key moved — it is exact
+            cur = ek
+        else:
+            cur = self._key(tid, pj)
+        if cur == ek:
+            self._accept(cls)
+            if not members:
+                heapq.heappop(heap)
+            self._advertise_abs(force=True)
+            return tid, pj
+        if cur < ek:
+            # best-effort detection, as in PR 1's flat heap: only surfacing
+            # roots are re-validated, but any observed violation means
+            # results are untrustworthy — fail loud.
+            raise ValueError(_MONOTONE_ERR)
+        comps = None
+        if self._off is not None:
+            regime, lk = self._classify(tid, pj, eng._ready_at[tid])
+            if regime == 0:
+                comps = self._off(tid, pj, eng._pe_free[pj])
+                if comps is not None:
+                    heapq.heappop(heap)
+                    heapq.heappush(self._offs[pj],
+                                   (comps + (name,), cid, gen, tid))
+                    self._advertise_off(pj)
+            elif regime == 1:
+                b = eng.link_free.get(lk, 0.0)
+                f = eng._pe_free[pj]
+                comps = self._off(tid, pj, b if b > f else f)
+                if comps is not None:
+                    heapq.heappop(heap)
+                    tag = (pj, lk)
+                    sub = self._links.get(tag)
+                    if sub is None:
+                        sub = self._links[tag] = []
+                    heapq.heappush(sub, (comps + (name,), cid, gen, tid))
+                    self._advertise_link(tag)
+        if comps is None:
+            heapq.heapreplace(heap, (cur, cid, gen, cur_ep, tid, pj))
+        self._advertise_abs(force=True)
+        return None
 
     def pop_best(self) -> Tuple[int, int]:
-        heap = self._heap
-        key = self._key
-        placed = self._eng._placed
+        """Return the exact (tid, pj) the reference scan would pick, and
+        advance that candidate's class head."""
+        top = self._top
+        adv = self._adv
         heappop = heapq.heappop
-        heapreplace = heapq.heapreplace
         while True:
-            k, tid, pj = heap[0]
-            if placed[tid] is not None:
-                heappop(heap)  # task placed via another (task, PE) entry
+            k, tag = top[0]
+            if adv.get(tag) is not k:
+                heappop(top)  # superseded advertisement
                 continue
-            cur = key(tid, pj)
-            if cur == k:
-                heappop(heap)
-                return tid, pj
-            if cur < k:
-                # a key decreased — the monotone invariant is broken (e.g. a
-                # VoS value_fn that *increases* with finish time). Detection
-                # is best-effort (only entries that surface at the heap root
-                # are re-validated), but any violation observed here means
-                # results are untrustworthy, so fail rather than continue.
-                raise ValueError(
-                    "candidate key decreased between evaluations; scheduling "
-                    "keys must be non-decreasing over the run (for VoS: "
-                    "value_fn must be non-increasing in finish time)")
-            # stale (stored key is a lower bound): refresh in place — one
-            # sift instead of a pop+push pair
-            heapreplace(heap, (cur, tid, pj))
+            heappop(top)
+            if tag.__class__ is int:
+                got = (self._pop_abs(k) if tag < 0
+                       else self._pop_off(k, tag))
+            else:
+                got = self._pop_link(k, tag)
+            if got is not None:
+                return got
 
 
 # ---------------------------------------------------------------------------
@@ -668,7 +1117,17 @@ def schedule_eft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     def key(tid: int, pj: int) -> Tuple:
         return (fin(tid, pj), neg_rank[tid], names[tid], pj)
 
-    sel = _LazyBest(eng, key)
+    # tasks with equal exec rows and equal rank are key-identical up to name
+    rows = eng._exec_row_ids
+    sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
+             if rows is not None else None)
+    off_base = eng._off_base
+
+    def offfn(tid: int, pj: int, base: float) -> Tuple:
+        # saturated key = (base + off_base, neg_rank, name, pj)
+        return (off_base(tid, pj), neg_rank[tid])
+
+    sel = _ClassedBest(eng, key, sigfn, offfn)
     while not eng.done():
         sel.push_ready()
         tid, pj = sel.pop_best()
@@ -687,19 +1146,35 @@ def schedule_etf(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     metrics; this FIFO-by-readiness + best-PE reading matches that (the
     classic Hwang ETF is kept as policy ``"etf_hwang"``).
 
-    ``ready_at`` is frozen per ready task, so task selection is a plain
-    heap; only the O(|PE|) best-PE scan runs per placement.
+    ``ready_at`` is frozen per ready task, so task selection needs no lazy
+    revalidation at all: the outer heap holds each *distinct* ready_at value
+    once (plain floats — no per-task tuple/string entries in the hot loop),
+    and the name tie-break is resolved through the per-value class FIFO,
+    exactly like the candidate classes of the (task, PE) policies. Only the
+    O(|PE|) best-PE scan runs per placement.
     """
     eng = _Engine(dag, pool, cost, arrival)
     names = eng._di.names
     pe_names = [p.name for p in eng._pi.pes]
     n_pes = eng.n_pes
     fin = eng._finish_fn()
-    h: List[Tuple[float, str, int]] = []
+    ready_heap: List[float] = []   # distinct ready_at values
+    buckets: Dict[float, List[Tuple[str, int]]] = {}  # value -> name-FIFO
     while not eng.done():
         for tid in eng.take_newly_ready():
-            heapq.heappush(h, (eng._ready_at_i(tid), names[tid], tid))
-        _, _, tid = heapq.heappop(h)
+            r = eng._ready_at_i(tid)
+            b = buckets.get(r)
+            if b is None:
+                buckets[r] = [(names[tid], tid)]
+                heapq.heappush(ready_heap, r)
+            else:
+                heapq.heappush(b, (names[tid], tid))
+        r = ready_heap[0]
+        b = buckets[r]
+        _, tid = heapq.heappop(b)
+        if not b:
+            heapq.heappop(ready_heap)
+            del buckets[r]
         best_pj = min(range(n_pes),
                       key=lambda pj: (fin(tid, pj), pe_names[pj]))
         eng._place_i(tid, best_pj)
@@ -721,7 +1196,16 @@ def schedule_etf_hwang(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
         hold, finish = start_fin(tid, pj)
         return (hold, finish, neg_rank[tid], names[tid], pj)
 
-    sel = _LazyBest(eng, key)
+    rows = eng._exec_row_ids
+    sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
+             if rows is not None else None)
+    off_base = eng._off_base
+
+    def offfn(tid: int, pj: int, base: float) -> Tuple:
+        # saturated key = (pe_free, base + off_base, neg_rank, name, pj)
+        return (0.0, off_base(tid, pj), neg_rank[tid])
+
+    sel = _ClassedBest(eng, key, sigfn, offfn, shift=(1, 2))
     while not eng.done():
         sel.push_ready()
         tid, pj = sel.pop_best()
@@ -741,7 +1225,15 @@ def schedule_minmin(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     def key(tid: int, pj: int) -> Tuple:
         return (fin(tid, pj), names[tid], pj)
 
-    sel = _LazyBest(eng, key)
+    rows = eng._exec_row_ids
+    sigfn = (lambda tid: rows[tid]) if rows is not None else None
+    off_base = eng._off_base
+
+    def offfn(tid: int, pj: int, base: float) -> Tuple:
+        # saturated key = (base + off_base, name, pj)
+        return (off_base(tid, pj),)
+
+    sel = _ClassedBest(eng, key, sigfn, offfn)
     while not eng.done():
         sel.push_ready()
         tid, pj = sel.pop_best()
@@ -841,9 +1333,15 @@ def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     from repro.core import vos as vos_mod
     eng = _Engine(dag, pool, cost, arrival)
     rank = _rank(dag, pool, cost)
+    # the default value curve depends on finish time only — custom curves
+    # may inspect the task, which makes tasks non-interchangeable, so class
+    # grouping is only enabled for the default
+    task_independent_value = value_fn is None
+    hard = None
     if value_fn is None:
         horizon = max(rank.values()) * 2.0 + 1e-9
-        value_fn = lambda t, f: vos_mod.linear_decay(f, soft=horizon / 2, hard=horizon * 4)
+        hard = horizon * 4
+        value_fn = lambda t, f: vos_mod.linear_decay(f, soft=horizon / 2, hard=hard)
     di = eng._di
     names = di.names
     tasks = di.tasks
@@ -855,7 +1353,29 @@ def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
         vos_rate = value_fn(tasks[tid], f) - energy_weight * energy(tid, pj)
         return (-vos_rate, f, names[tid], pj)
 
-    sel = _LazyBest(eng, key)
+    rows = eng._exec_row_ids
+    erows = eng._energy_row_ids
+    sigfn = ((lambda tid: (rows[tid], erows[tid]))
+             if task_independent_value and rows is not None
+             and erows is not None else None)
+    # -value_fn(finish) is nonlinear in finish, so saturated keys are not
+    # base + constant in general — but past the hard deadline the default
+    # curve is pinned at exactly 0 and the key degenerates to
+    # (energy_weight·energy, finish, name, pj): comp0 static, comp1 offset.
+    # finish only grows, so 'minimum finish ≥ hard' holds forever. At
+    # instance counts where scaling matters the bulk of the run is past
+    # the deadline; earlier candidates stay on the absolute lazy path.
+    offfn = None
+    if task_independent_value:
+        off_base = eng._off_base
+
+        def offfn(tid: int, pj: int, base: float) -> Optional[Tuple]:
+            s = off_base(tid, pj)
+            if base + s < hard:
+                return None
+            return (energy_weight * energy(tid, pj), s)
+
+    sel = _ClassedBest(eng, key, sigfn, offfn, shift=(0, 2))
     while not eng.done():
         sel.push_ready()
         tid, pj = sel.pop_best()

@@ -43,16 +43,19 @@ class RunResult:
     wall_seconds: float = 0.0
 
 
-def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
-                  policy: str = "eft", n_instances: int = 100,
-                  period: float = 0.0, label: str = "") -> RunResult:
-    """Submit ``n_instances`` copies of ``workload`` (all at once, or one
-    every ``period`` seconds) and schedule them on ``pool``.
+def merge_instances(workload: PipelineDAG, n_instances: int,
+                    period: float = 0.0
+                    ) -> Tuple[PipelineDAG, Dict[str, float]]:
+    """Replicate ``workload`` ×``n_instances`` into one scheduling problem.
 
-    Instance merging uses the acyclic fast path in :func:`repro.core.dag.merge`
-    and the incremental engine in :mod:`repro.core.schedulers`, so 1k-instance
-    sweeps are tractable; ``wall_seconds`` records the scheduler cost."""
-    t0 = time.perf_counter()
+    Returns the merged DAG plus the arrival map (empty when ``period<=0``).
+    :meth:`PipelineDAG.instance` copies each template task's cost fields
+    (op, work, in/out bytes) verbatim, so the n replicas of a template task
+    get bitwise-identical cost rows (``repro.core.cost_model.row_ids``) —
+    which is exactly what lets the scheduling engine fold them into shared
+    candidate classes on instance sweeps. Build the merged problem once and
+    reuse it across policies (:func:`sweep_policies` does) so the DAG index
+    and cost tables are shared rather than rebuilt per policy."""
     instances = [workload.instance(i) for i in range(n_instances)]
     merged = dag_mod.merge(instances, name=f"{workload.name}x{n_instances}")
     arrival: Dict[str, float] = {}
@@ -60,6 +63,25 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
         for i, inst in enumerate(instances):
             for t in inst.tasks:
                 arrival[t.name] = i * period
+    return merged, arrival
+
+
+def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
+                  policy: str = "eft", n_instances: int = 100,
+                  period: float = 0.0, label: str = "",
+                  _premerged: Optional[Tuple[PipelineDAG, Dict[str, float]]] = None
+                  ) -> RunResult:
+    """Submit ``n_instances`` copies of ``workload`` (all at once, or one
+    every ``period`` seconds) and schedule them on ``pool``.
+
+    Instance merging uses the acyclic fast path in :func:`repro.core.dag.merge`
+    and the incremental engine in :mod:`repro.core.schedulers`, so 1k-instance
+    sweeps are tractable; ``wall_seconds`` records the scheduler cost.
+    ``_premerged`` (from :func:`merge_instances`) skips the merge when the
+    caller sweeps several policies over one problem."""
+    t0 = time.perf_counter()
+    merged, arrival = _premerged or merge_instances(workload, n_instances,
+                                                    period)
     sched = schedule(merged, pool, cost, policy=policy, arrival=arrival)
     return RunResult(label or pool.describe(), policy, sched.makespan,
                      sched.mean_utilization, sched.total_energy,
@@ -111,11 +133,13 @@ def sweep_policies(workload: PipelineDAG, pool: Optional[ResourcePool] = None,
                    ) -> List[RunResult]:
     cost = cost or CostModel()
     pool = pool or paper_pool()  # paper's best: 3 ARM+1 Volta | 3 Xeon+1 V100+1 Alveo
+    premerged = merge_instances(workload, n_instances)
     out = []
     for pol in policies:
         out.append(run_instances(workload, pool, cost, policy=pol,
                                  n_instances=n_instances,
-                                 label=pool.describe()))
+                                 label=pool.describe(),
+                                 _premerged=premerged))
     return out
 
 

@@ -1,0 +1,43 @@
+"""Version compatibility for the handful of new-style jax sharding APIs.
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``); older jax releases (< 0.5) ship the same
+functionality as ``jax.experimental.shard_map.shard_map`` (with the
+``check_rep`` keyword) and the ambient-mesh context manager on
+:class:`jax.sharding.Mesh` itself. Import from here instead of feature-
+probing at each call site:
+
+    from repro.distributed.compat import set_mesh, shard_map
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["axis_size", "set_mesh", "shard_map"]
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Size of a named mesh axis from inside shard_map: old jax spells
+        it psum(1, axis)."""
+        return jax.lax.psum(1, axis_name)
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh):
+        """Ambient-mesh context: old jax enters the Mesh itself."""
+        return mesh

@@ -37,6 +37,8 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 import jax
+
+from repro.distributed.compat import set_mesh
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -180,7 +182,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
                     return step(state, batch)
 
             t0 = time.time()
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 lowered = jax.jit(
                     fn, in_shardings=(state_sh, batch_sh),
                     out_shardings=(state_sh, None)
@@ -227,7 +229,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
             if info["kind"] == "decode" and donate_caches:
                 donate = (3,)
             t0 = time.time()
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 lowered = jax.jit(
                     fn, in_shardings=tuple(shardings),
                     donate_argnums=donate).lower(*args)
@@ -239,6 +241,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 wraps it per-program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     hlo = hlo_analysis.analyze(txt, chips_per_pod=CHIPS_PER_POD)
 

@@ -215,16 +215,27 @@ def _dot_flops_of_line(ln: str,
     out_elems = 1
     for d in out_shape:
         out_elems *= d
-    m_ops = re.search(r"dot\(%([\w\.\-]+),\s*%([\w\.\-]+)\)", ln)
-    if not m_ops:
+    m_args = re.search(r"dot\(([^)]*)\)", ln)
+    if not m_args:
         return 0.0
+    # operands are either '%name' (scheduled HLO) or typed
+    # 'f32[4,128]{1,0} %name' (older XLA dumps) — inline shapes win,
+    # otherwise resolve by name through the symbol table
+    operands = []
+    for m in re.finditer(r"(?:([a-z0-9]+)\[([\d,]*)\]\S*\s+)?%([\w\.\-]+)",
+                         m_args.group(1)):
+        dims, name = m.group(2), m.group(3)
+        if dims is not None:
+            shape = tuple(int(d) for d in dims.split(",") if d != "")
+        else:
+            entry = symtab.get(name)
+            shape = entry[1] if entry is not None else None
+        operands.append(shape)
     for side, kw in ((0, "lhs_contracting_dims"), (1, "rhs_contracting_dims")):
-        name = m_ops.group(side + 1)
         m_cd = re.search(kw + r"=\{([\d,]*)\}", ln)
-        entry = symtab.get(name)
-        if entry is None or m_cd is None:
+        shape = operands[side] if side < len(operands) else None
+        if shape is None or m_cd is None:
             continue
-        _, shape = entry
         contract = 1
         ok = True
         for i in m_cd.group(1).split(","):

@@ -27,6 +27,7 @@ def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
 def test_moe_shard_map_matches_spmd():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from repro.distributed.compat import set_mesh
         from repro.models.config import ModelConfig
         from repro.models import moe as moe_lib
         from repro.distributed import sharding as sh
@@ -46,7 +47,7 @@ def test_moe_shard_map_matches_spmd():
         rules = sh.strategy_for(cfg, mesh, moe_shard_map=True)
         assert rules.options["moe_shard_map"]
         with sh.logical_axis_rules(rules):
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 y, aux = jax.jit(lambda p_, x_: moe_lib.apply_moe_shard_map(
                     cfg, p_, x_, rules))(p, x)
         err = float(jnp.abs(y - y_ref).max())
@@ -62,7 +63,7 @@ def test_moe_shard_map_matches_spmd():
         y_ref2, _ = moe_lib.apply_moe_spmd(cfg2, p2, x)
         rules2 = sh.strategy_for(cfg2, mesh, moe_shard_map=True)
         with sh.logical_axis_rules(rules2):
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 y2, _ = jax.jit(lambda p_, x_: moe_lib.apply_moe_shard_map(
                     cfg2, p_, x_, rules2))(p2, x)
         err2 = float(jnp.abs(y2 - y_ref2).max())
@@ -75,6 +76,7 @@ def test_moe_shard_map_matches_spmd():
 def test_moe_shard_map_grad_flows():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.distributed.compat import set_mesh
         from repro.models.config import ModelConfig
         from repro.models import moe as moe_lib
         from repro.distributed import sharding as sh
@@ -97,7 +99,7 @@ def test_moe_shard_map_grad_flows():
             return (y ** 2).mean() + 0.01 * aux["aux_loss"]
 
         with sh.logical_axis_rules(rules):
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 g1 = jax.jit(jax.grad(loss_sm))(p)
         g2 = jax.grad(loss_ref)(p)
         d = jax.tree_util.tree_map(
@@ -112,6 +114,7 @@ def test_moe_shard_map_grad_flows():
 def test_sharded_flash_decode_matches_baseline():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.distributed.compat import set_mesh
         from repro.configs import get_config
         from repro.models import model as M
         from repro.models import transformer as T
@@ -133,7 +136,7 @@ def test_sharded_flash_decode_matches_baseline():
         rules = sh.strategy_for(cfg, mesh, decode_flash_shard=True)
         assert rules.rules["cache_cap"] == "model"
         with sh.logical_axis_rules(rules):
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 caches2 = T.init_caches(cfg, B, 32)
                 lg_p2, caches2 = jax.jit(
                     lambda pr, t, c: M.prefill(cfg, pr, t, c))(
@@ -152,6 +155,7 @@ def test_sharded_flash_decode_matches_baseline():
 def test_fsdp_strategy_matches_tp_loss():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.distributed.compat import set_mesh
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_config
         from repro.distributed import sharding as sh
@@ -180,7 +184,7 @@ def test_fsdp_strategy_matches_tp_loss():
             def fn(s, b):
                 with sh.logical_axis_rules(rules):
                     return step(s, b)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 _, m2 = jax.jit(fn, in_shardings=(st_sh, b_sh),
                                 out_shardings=(st_sh, None))(state, batch)
         assert abs(float(m_ref["loss"]) - float(m2["loss"])) < 1e-4

@@ -1,0 +1,171 @@
+"""Candidate-class grouping tests for the scheduling engine (PR 2).
+
+The class-grouped offset-heap selector (`repro.core.schedulers._ClassedBest`)
+folds interchangeable ready tasks — identical (cost rows, rank), frozen
+``ready_at`` and transfer-plan signature — into one candidate class, and
+keeps per-PE / per-link offset sub-heaps whose order never goes stale.
+These tests stress exactly the collision structure that machinery exploits:
+
+  * hypothesis differential: random DAGs drawn from a *tiny* op/work/bytes
+    vocabulary (many tasks share cost rows) must schedule byte-identically
+    to the frozen reference engine, for every policy;
+  * instance-merge differential: replicated instances (the n-instance
+    sweep) are the maximal-collision case, including past VoS's hard
+    deadline where its offset form activates;
+  * class-split unit test: same op signature but different ``ready_at``
+    must never merge into one class (and equal signatures must).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dag as dag_mod
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG, Task
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES, schedule
+from repro.core.schedulers_reference import schedule_reference
+
+
+def _assignment_tuples(sched):
+    return [(a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+            for a in sched.assignments]
+
+
+def _collision_dag(seed: int, n_tasks: int, n_ops: int, edge_p: float,
+                   arrival_period: float = 0.0):
+    """Random DAG over a deliberately tiny vocabulary: only ``n_ops``
+    distinct (op, work, out_bytes) combos, quantised work — so many tasks
+    share an op signature and, frequently, exact ready times."""
+    rng = np.random.default_rng(seed)
+    ops = ["ingest", "sql_transform", "kmeans", "summarize", "window_agg",
+           "linreg", "anomaly", "export"][:n_ops]
+    vocab = [(op, float(1 + 2 * k), float((k % 3) * 1e6))
+             for k, op in enumerate(ops)]
+    g = PipelineDAG(f"coll{seed}")
+    for i in range(n_tasks):
+        op, work, out = vocab[int(rng.integers(len(vocab)))]
+        g.add_task(Task(f"t{i:03d}", op, work=work, out_bytes=out,
+                        in_bytes=4e6 if i % 7 == 0 else 0.0))
+    for i in range(1, n_tasks):
+        for j in range(i):
+            if rng.random() < edge_p:
+                g.add_edge(f"t{j:03d}", f"t{i:03d}")
+    arrival = {}
+    if arrival_period > 0:
+        arrival = {t.name: arrival_period * (i % 5)
+                   for i, t in enumerate(g.tasks)}
+    return g, arrival
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_ops=st.integers(min_value=1, max_value=4),
+       edge_p=st.floats(min_value=0.0, max_value=0.35),
+       period=st.floats(min_value=0.0, max_value=4.0))
+def test_collision_heavy_differential(seed, n_ops, edge_p, period):
+    """Byte-identical to the reference engine on signature-colliding DAGs,
+    for every policy, with and without arrival maps."""
+    dag, arrival = _collision_dag(seed, n_tasks=24, n_ops=n_ops,
+                                  edge_p=edge_p, arrival_period=period)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    for policy in POLICIES:
+        live = schedule(dag, pool, cost, policy=policy, arrival=arrival)
+        ref = schedule_reference(dag, pool, cost, policy=policy,
+                                 arrival=arrival)
+        assert _assignment_tuples(live) == _assignment_tuples(ref), policy
+
+
+def _chain_template(n_stages: int = 4) -> PipelineDAG:
+    g = PipelineDAG("chain")
+    prev = None
+    for i, (op, work, out) in enumerate(
+            [("ingest", 2.0, 2e6), ("sql_transform", 5.0, 1e6),
+             ("kmeans", 9.0, 5e5), ("export", 1.0, 0.0)][:n_stages]):
+        g.add_task(Task(op, op, work=work, out_bytes=out,
+                        in_bytes=4e6 if i == 0 else 0.0))
+        if prev:
+            g.add_edge(prev, op)
+        prev = op
+    return g
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_instance_merge_differential(policy):
+    """Replicated-instance merges (the paper's n-instance sweep) are the
+    maximal class-collision case: every template task appears ×n with an
+    identical signature. 40 instances also push finish times past VoS's
+    hard deadline, exercising its flat-value offset form."""
+    merged = dag_mod.merge([_chain_template().instance(i) for i in range(40)],
+                           name="chainx40")
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    live = schedule(merged, pool, cost, policy=policy)
+    ref = schedule_reference(merged, pool, cost, policy=policy)
+    assert _assignment_tuples(live) == _assignment_tuples(ref)
+
+
+def _eft_selector(dag: PipelineDAG, pool, cost):
+    """Build EFT's engine + class selector exactly as schedule_eft does,
+    without running the loop (for class-structure introspection)."""
+    from repro.core import schedulers as S
+    eng = S._Engine(dag, pool, cost)
+    rank = S._rank(dag, pool, cost)
+    names = eng._di.names
+    neg_rank = [-rank[nm] for nm in names]
+    fin = eng._finish_fn()
+    key = lambda tid, pj: (fin(tid, pj), neg_rank[tid], names[tid], pj)
+    rows = eng._exec_row_ids
+    sigfn = lambda tid: (rows[tid], neg_rank[tid])
+    offfn = lambda tid, pj, base: (eng._off_base(tid, pj), neg_rank[tid])
+    return eng, S._ClassedBest(eng, key, sigfn, offfn)
+
+
+def test_class_split_on_ready_at_never_merges():
+    """Two tasks with the same op signature but different ready times must
+    land in different candidate classes (their keys differ while a PE is
+    idle); equal signatures and ready times must share one class."""
+    g = PipelineDAG("split")
+    # two parents with different works → children become ready at
+    # different times; the children themselves are signature-identical
+    g.add_task(Task("pa", "ingest", work=2.0, out_bytes=0.0))
+    g.add_task(Task("pb", "ingest", work=11.0, out_bytes=0.0))
+    for name, parent in (("ca", "pa"), ("cb", "pb"), ("cc", "pb")):
+        g.add_task(Task(name, "kmeans", work=5.0, out_bytes=0.0))
+        g.add_edge(parent, name)
+    pool = paper_pool(n_arm=2, n_volta=0, n_xeon=0, n_v100=0, n_alveo=0)
+    cost = CostModel()
+    eng, sel = _eft_selector(g, pool, cost)
+
+    sel.push_ready()                      # sources pa, pb
+    eng._place_i(eng._di.id_of["pa"], 0)  # finish 2.0  → ca ready at 2.0
+    eng._place_i(eng._di.id_of["pb"], 1)  # finish 11.0 → cb, cc ready at 11
+    sel.push_ready()
+
+    by_members = {}
+    for cls in sel._classes:
+        for _name, tid in cls.members:
+            by_members[eng._di.names[tid]] = cls
+    # same op signature, different ready_at: split
+    assert by_members["ca"] is not by_members["cb"]
+    # same op signature AND same ready_at: merged, name-ordered head
+    assert by_members["cb"] is by_members["cc"]
+    assert by_members["cb"].members[0][0] == "cb"
+    # the split classes carry distinct frozen ready_at values in their sigs
+    assert by_members["ca"].sig != by_members["cb"].sig
+
+
+def test_offset_entries_survive_horizon_advance():
+    """Offset sub-heap entries stay exact across pe_free advances: after
+    placements move every horizon, pop_best must still return the exact
+    reference-order candidate (smoke for the no-revalidation invariant)."""
+    merged = dag_mod.merge([_chain_template().instance(i) for i in range(12)],
+                           name="chainx12")
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    live = schedule(merged, pool, cost, policy="eft")
+    ref = schedule_reference(merged, pool, cost, policy="eft")
+    assert _assignment_tuples(live) == _assignment_tuples(ref)
