@@ -1,0 +1,137 @@
+"""Online-driver benchmark: per-event cost + digest parity vs the batch engine.
+
+    PYTHONPATH=src python benchmarks/bench_online.py \
+        [--sizes 100,1000] [--period 5.0] [--policies eft,etf] \
+        [--out BENCH_sched.json] [--max-ratio 2.0] [--smoke]
+
+For each (policy, n): schedule n instances of ``ds_workload()`` arriving
+every ``period`` seconds on ``paper_pool()`` twice —
+
+  * **batch**: merge all instances up front + one ``schedule()`` call (the
+    offline path, timed like benchmarks/bench_sched.py);
+  * **online**: stream them through ``repro.core.online.OnlineDriver``
+    (instances admitted into the live engine as the admission gate pulls
+    them in, retired when finished).
+
+The two schedules are asserted byte-identical (sha256 over the assignment
+list) — the bench doubles as the CI online-mode smoke (``--smoke``: tiny n,
+nonzero period, exit 1 on divergence). Reported per (policy, n):
+
+  * ``batch_seconds`` / ``online_seconds`` and their ratio — the online
+    driver must stay within ``--max-ratio`` (default 2.0) of the batch
+    engine at the same n (gated when the batch time is large enough to be
+    meaningful);
+  * ``per_event_us`` — online wall time per placement. This is the online
+    claim: it tracks the *live* instance set (``max_live``), not the total
+    instance count, so it stays flat as n grows at a fixed arrival rate.
+
+With ``--out`` pointing at BENCH_sched.json the results are merged into
+that file under an ``"online"`` key (the batch trajectory stays untouched).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def bench(sizes, policies, period: float, max_ratio: float):
+    from repro.core.cost_model import CostModel
+    from repro.core.online import run_online
+    from repro.core.resources import paper_pool
+    from repro.core.schedulers import assignment_digest as _digest, schedule
+    from repro.core.simulator import merge_instances
+    from repro.pipeline.workloads import ds_workload
+
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    results: dict = {pol: {} for pol in policies}
+    failures: list = []
+    for n in sizes:
+        merged, arrival = merge_instances(wl, n, period)
+        for pol in policies:
+            t0 = time.perf_counter()
+            batch = schedule(merged, pool, cost, policy=pol, arrival=arrival)
+            batch_s = time.perf_counter() - t0
+            online = run_online(wl, pool, cost, policy=pol, n_instances=n,
+                                period=period)
+            online_s = online.wall_seconds
+            if _digest(batch.assignments) != _digest(
+                    online.schedule.assignments):
+                failures.append(f"{pol} n={n}: online schedule diverged "
+                                f"from the batch engine")
+            ratio = online_s / batch_s if batch_s > 0 else float("inf")
+            per_event_us = online_s / max(online.n_events, 1) * 1e6
+            results[pol][str(n)] = {
+                "batch_seconds": round(batch_s, 4),
+                "online_seconds": round(online_s, 4),
+                "ratio": round(ratio, 3),
+                "per_event_us": round(per_event_us, 2),
+                "max_live": online.max_live,
+                "period": period,
+            }
+            # gate only when the batch time is above timer noise (same
+            # threshold as bench_sched's baseline gate)
+            if batch_s >= 0.05 and ratio > max_ratio:
+                failures.append(
+                    f"{pol} n={n}: online {online_s:.3f}s > "
+                    f"{max_ratio:g}x batch {batch_s:.3f}s")
+            print(f"online,{pol}_n{n}_wall,{online_s:.3f},s  "
+                  f"(batch {batch_s:.3f}s, ratio {ratio:.2f}, "
+                  f"{per_event_us:.0f}us/event, live<={online.max_live})")
+    return results, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: n=24, nonzero period, eft+etf, no file "
+                         "write unless --out given explicitly")
+    ap.add_argument("--sizes", default="100,1000")
+    ap.add_argument("--period", type=float, default=5.0,
+                    help="arrival period in seconds (0 = all at once)")
+    ap.add_argument("--policies", default="eft,etf")
+    ap.add_argument("--out", default=None,
+                    help="merge results under an 'online' key of this JSON "
+                         "(typically BENCH_sched.json)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail if online wall time exceeds this multiple "
+                         "of the batch engine at the same n")
+    args = ap.parse_args(argv)
+    sizes = [24] if args.smoke else [int(s) for s in args.sizes.split(",")]
+    policies = args.policies.split(",")
+    t0 = time.perf_counter()
+    results, failures = bench(sizes, policies, args.period, args.max_ratio)
+    if args.out:
+        payload = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                payload = json.load(f)
+        payload["online"] = {
+            "meta": {
+                "workload": "ds_workload x n on paper_pool, streamed via "
+                            "repro.core.online.OnlineDriver",
+                "timing": "driver submit+run wall vs schedule() on the "
+                          "premerged problem",
+                "period": args.period,
+                "total_seconds": round(time.perf_counter() - t0, 1),
+            },
+            "results": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

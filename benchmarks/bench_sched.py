@@ -35,7 +35,6 @@ n=3000 in ~4.6 s.
 from __future__ import annotations
 
 import argparse
-import hashlib
 import json
 import os
 import sys
@@ -46,13 +45,10 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
 
 
 def _digest(sched) -> str:
-    """sha256 over the full assignment list (same recipe as the golden
-    tests in tests/test_sched_golden.py)."""
-    h = hashlib.sha256()
-    for a in sched.assignments:
-        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
-                       a.comm_wait, a.energy)).encode())
-    return h.hexdigest()
+    """Shared byte-identity recipe — see
+    repro.core.schedulers.assignment_digest."""
+    from repro.core.schedulers import assignment_digest
+    return assignment_digest(sched.assignments)
 
 
 def bench(sizes, policies, repeat: int = 1, check_golden: bool = False):

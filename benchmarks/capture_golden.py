@@ -9,24 +9,19 @@ SEED (pre-incremental) engine and the incremental engine is pinned
 byte-identical to them — regenerate only when scheduling *semantics* are
 intentionally changed, and say so in the commit.
 """
-import hashlib
 import json
 import sys
 import time
 
 from repro.core.cost_model import CostModel
 from repro.core.resources import paper_pool
-from repro.core.schedulers import POLICIES
+from repro.core.schedulers import POLICIES, assignment_digest
 from repro.core.simulator import run_instances
 from repro.pipeline.workloads import ds_workload
 
 
 def sched_digest(sched):
-    h = hashlib.sha256()
-    for a in sched.assignments:
-        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
-                       a.comm_wait, a.energy)).encode())
-    return h.hexdigest()
+    return assignment_digest(sched.assignments)
 
 
 def main():

@@ -11,8 +11,10 @@ from repro.core.resources import (BACKEND, FRONTEND, Link, ProcessingElement,
                                   ResourcePool, paper_pool, tpu_pool)
 from repro.core.cost_model import (CostModel, LearnedCostModel, RooflineTerms,
                                    roofline_time)
-from repro.core.schedulers import (POLICIES, SCHEDULERS, Assignment, Schedule,
-                                   schedule)
+from repro.core.schedulers import (POLICIES, SCHEDULERS, Assignment,
+                                   OnlineEngine, Schedule, schedule)
+from repro.core.online import (OnlineDriver, OnlineRunResult,
+                               restart_from_history, run_online)
 from repro.core.vos import VoSSpec, system_vos, uniform_specs
 from repro.core import simulator
 
@@ -21,6 +23,8 @@ __all__ = [
     "BACKEND", "FRONTEND", "Link", "ProcessingElement", "ResourcePool",
     "paper_pool", "tpu_pool",
     "CostModel", "LearnedCostModel", "RooflineTerms", "roofline_time",
-    "POLICIES", "SCHEDULERS", "Assignment", "Schedule", "schedule",
+    "POLICIES", "SCHEDULERS", "Assignment", "OnlineEngine", "Schedule",
+    "schedule",
+    "OnlineDriver", "OnlineRunResult", "restart_from_history", "run_online",
     "VoSSpec", "system_vos", "uniform_specs", "simulator",
 ]

@@ -207,7 +207,8 @@ class CostModel:
         return acc / max(n, 1)
 
 
-def row_ids(table: "np.ndarray") -> List[int]:
+def row_ids(table: "np.ndarray",
+            seen: Optional[Dict[bytes, int]] = None) -> List[int]:
     """Dense row-identity ids for a per-(task, PE) cost table.
 
     ``row_ids(E)[i] == row_ids(E)[k]`` iff tasks ``i`` and ``k`` have
@@ -215,12 +216,18 @@ def row_ids(table: "np.ndarray") -> List[int]:
     missing rates, never to real values). Two tasks with equal exec/energy
     rows are indistinguishable to every scheduling-policy key except for
     their name tie-break, which is what lets the incremental engine fold
-    them into one candidate class. O(V·P) hashing, done once per engine."""
+    them into one candidate class. O(V·P) hashing, done once per engine.
+
+    ``seen`` is an optional persistent registry (row bytes → id): the online
+    engine passes one so tasks admitted in *different* batches still share
+    ids when their cost rows are bit-identical (instances of one template
+    workload collapse into shared candidate classes across admissions)."""
     mat = np.ascontiguousarray(table, dtype=np.float64)
     width = mat.shape[1] * mat.itemsize
     if width == 0:  # no PEs: every (empty) row is identical
         return [0] * mat.shape[0]
-    seen: Dict[bytes, int] = {}
+    if seen is None:
+        seen = {}
     raw = mat.tobytes()
     return [seen.setdefault(raw[off:off + width], len(seen))
             for off in range(0, len(raw), width)]

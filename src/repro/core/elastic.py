@@ -88,6 +88,18 @@ class HealthMonitor:
                          else self.alpha * step_s + (1 - self.alpha) * h.ewma_step_s)
         h.steps += 1
         h.last_heartbeat = now
+        # strike accounting lives here — exactly one strike decision per
+        # observation, against the fleet median at observation time.
+        # Polling stragglers() between observations can neither
+        # double-count (it is a pure read) nor miss batched slow
+        # observations (each is judged as it arrives).
+        if h.alive:
+            med = self._median()
+            if med > 0:
+                if h.ewma_step_s > self.threshold * med:
+                    self._strikes[worker] += 1
+                else:
+                    self._strikes[worker] = 0
 
     def heartbeat(self, worker: str, now: float) -> None:
         self.health[worker].last_heartbeat = now
@@ -98,20 +110,13 @@ class HealthMonitor:
         return float(np.median(ts)) if ts else 0.0
 
     def stragglers(self) -> List[str]:
-        med = self._median()
-        if med <= 0:
-            return []
-        out = []
-        for w, h in self.health.items():
-            if not h.alive or h.steps == 0:
-                continue
-            if h.ewma_step_s > self.threshold * med:
-                self._strikes[w] += 1
-            else:
-                self._strikes[w] = 0
-            if self._strikes[w] >= self.patience:
-                out.append(w)
-        return out
+        """Workers over ``threshold`` × fleet median for ≥ ``patience``
+        consecutive *observations*. Strikes are accounted in
+        :meth:`observe`; this method is a pure read and can be called any
+        number of times between observations."""
+        return [w for w, h in self.health.items()
+                if h.alive and h.steps > 0
+                and self._strikes[w] >= self.patience]
 
     def dead(self, now: float) -> List[str]:
         return [w for w, h in self.health.items()
@@ -122,6 +127,18 @@ class HealthMonitor:
 
     def healthy(self) -> List[str]:
         return [w for w, h in self.health.items() if h.alive]
+
+
+def prune_pool(pool, monitor: "HealthMonitor"):
+    """Scheduler-side mitigation: the surviving :class:`ResourcePool` after
+    dropping the monitor's dead workers (worker ids are PE names).
+
+    Feed the result to ``OnlineDriver.repool`` (repro.core.online) so the
+    live scheduling engine re-plans onto the surviving PEs without a full
+    restart — the JITA loop of "continuous provisioning and
+    re-provisioning" closed over the workload manager."""
+    healthy = set(monitor.healthy())
+    return pool.subset(p.name for p in pool.pes if p.name in healthy)
 
 
 # ---------------------------------------------------------------------------

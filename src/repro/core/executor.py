@@ -88,7 +88,12 @@ class Executor:
     def execute(self, dag: PipelineDAG, schedule: Schedule,
                 inputs: Optional[Mapping[str, Any]] = None) -> ExecutionReport:
         inputs = dict(inputs or {})
-        order = sorted(schedule.assignments, key=lambda a: (a.start, a.task))
+        # tie-break equal start times by topological order, not name: a
+        # zero-duration predecessor can share its successor's start time,
+        # and name order may put the successor first (outputs[p] missing)
+        topo_pos = {t.name: i for i, t in enumerate(dag.topological_order())}
+        order = sorted(schedule.assignments,
+                       key=lambda a: (a.start, topo_pos[a.task]))
         outputs: Dict[str, Any] = {}
         runs: List[TaskRun] = []
         t_all = time.perf_counter()

@@ -1,0 +1,304 @@
+"""Streaming workload driver — the paper's *online* workload manager.
+
+The paper's runtime is online: pipeline instances "arrive" over time, the
+workload manager dispatches their tasks as resources free up, and the VDC
+is "dynamically and automatically assembled and re-assembled". The batch
+path (:func:`repro.core.simulator.run_instances` with ``period > 0``)
+emulates this by materialising the full arrival map up front and solving
+one merged problem; this module feeds instances into a *live*
+:class:`repro.core.schedulers.OnlineEngine` as they arrive and retires
+finished ones — the same schedules, produced by an actual runtime loop
+whose per-event cost is independent of how many instances the run will
+ever see.
+
+Admission gate (why deferred admission is exact)
+------------------------------------------------
+Every policy key the engine uses leads with a time-like component that is
+bounded below by the candidate task's frozen ``ready_at``, which is in turn
+bounded below by its instance's arrival time (EFT/Min-Min: finish; Hwang
+ETF: hold; ETF: ready_at itself; VoS: ``-decay(t)``, since its value curve
+is non-increasing). So while
+
+    ``policy.arrival_floor(next_arrival) > policy.peek_time()``
+
+no task of the next (or any later) pending instance can win — or even tie —
+the next placement, and the driver may defer its admission. The gate
+re-checks after every admission; when it stops admitting, the candidate
+set visible to the selector contains every candidate that could possibly
+be chosen, so each pop equals the batch engine's pop by induction. RR and
+HEFT have no time-keyed selection (``deferrable = False``): reproducing
+their batch schedules requires full foreknowledge, and the driver admits
+every pending instance before placing (documented degeneration — those
+policies are inherently offline).
+
+Elastic re-plan
+---------------
+:meth:`OnlineDriver.repool` applies a grown/shrunk pool to the live run:
+the engine remaps horizons by PE name, drops cached transfer plans and
+link horizons for vanished locations, rebuilds cost tables, re-marks the
+ready set, and the policy run rebinds its selector over the survivors —
+in-flight schedules adapt without a full restart. The dual
+:func:`restart_from_history` path rebuilds an equivalent driver from the
+durable record (admissions + assignment history) on the surviving pool;
+tests/test_online.py differentially pins the two against each other.
+
+Typical use::
+
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(1000):
+        drv.submit(workload.instance(i), arrival_t=i * period)
+    schedule = drv.run()          # or: while drv.step() is not None: ...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG
+from repro.core.resources import ResourcePool
+from repro.core.schedulers import (Assignment, OnlineEngine, Schedule,
+                                   make_policy_run)
+from repro.core.simulator import RunResult
+
+
+@dataclasses.dataclass
+class InstanceState:
+    """Book-keeping for one admitted pipeline instance."""
+
+    name: str
+    arrival: float
+    first_tid: int
+    n_tasks: int
+    dag: PipelineDAG
+    remaining: int = 0
+    finish: float = 0.0
+    completed: bool = False
+
+
+@dataclasses.dataclass
+class OnlineRunResult(RunResult):
+    """Batch-compatible result plus online-run telemetry."""
+
+    #: placements performed (= tasks admitted when the run drains)
+    n_events: int = 0
+    #: high-water mark of simultaneously live (admitted, unfinished)
+    #: instances — the quantity per-event cost actually scales with
+    max_live: int = 0
+    #: (instance name, completion time) in completion order
+    completions: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)
+
+
+class OnlineDriver:
+    """Event loop gluing pending arrivals, the live engine and one policy.
+
+    ``submit`` queues an instance for arrival at ``arrival_t`` (any order;
+    a heap keeps them sorted, ties broken by submission order — the same
+    order the batch path merges instances in). ``step`` admits every
+    instance the admission gate says could influence the next placement,
+    then places exactly one task. ``run`` drains pending + live work and
+    returns the :class:`Schedule`.
+
+    Finished instances are *retired*: their completion is recorded and
+    their per-task transfer-plan cache rows are freed, so live memory in
+    the hot structures tracks the live set, not everything ever admitted.
+    """
+
+    def __init__(self, pool: ResourcePool, cost: Optional[CostModel] = None,
+                 policy: str = "eft", contended_links: bool = True,
+                 **policy_kw) -> None:
+        self.pool = pool
+        self.cost = cost or CostModel()
+        self.policy_name = policy
+        self.eng = OnlineEngine(pool, self.cost,
+                                contended_links=contended_links)
+        self.policy = make_policy_run(policy, self.eng, **policy_kw)
+        self._pending: List[Tuple[float, int, PipelineDAG]] = []
+        self._seq = 0
+        self.instances: List[InstanceState] = []
+        self._inst_of: List[int] = []  # tid -> index into self.instances
+        self.completions: List[Tuple[str, float]] = []
+        self.n_events = 0
+        self.max_live = 0
+        self._live = 0
+
+    # -- submission / admission ----------------------------------------------
+    def submit(self, dag: PipelineDAG, arrival_t: float = 0.0) -> None:
+        """Queue ``dag`` to arrive at ``arrival_t`` (not yet admitted)."""
+        heapq.heappush(self._pending, (float(arrival_t), self._seq, dag))
+        self._seq += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def live_instances(self) -> int:
+        return self._live
+
+    def _admit_now(self, dag: PipelineDAG, arrival_t: float) -> InstanceState:
+        tids = self.eng.admit(dag, arrival_t)
+        self.policy.on_admit(dag)
+        inst = InstanceState(dag.name, arrival_t,
+                             tids[0] if tids else len(self._inst_of),
+                             len(tids), dag, remaining=len(tids))
+        self.instances.append(inst)
+        self._inst_of.extend([len(self.instances) - 1] * len(tids))
+        if inst.remaining == 0:  # degenerate empty instance
+            inst.completed = True
+            self.completions.append((inst.name, inst.finish))
+        else:
+            self._live += 1
+            if self._live > self.max_live:
+                self.max_live = self._live
+        return inst
+
+    def _admit_due(self) -> None:
+        """Admit every pending instance whose arrival-time key floor does
+        not exceed the current best candidate key (see module docstring);
+        re-peek after each admission — fresh candidates may lower the
+        best key and pull in further arrivals."""
+        pending = self._pending
+        pol = self.policy
+        eng = self.eng
+        while pending:
+            t = pending[0][0]
+            # only gate when live candidates exist: with an empty ready set
+            # the next arrival must be admitted regardless (and policy
+            # state — e.g. VoS's value curve — may not exist before the
+            # first admission)
+            if pol.deferrable and eng._ready:
+                best = pol.peek_time()
+                if best is not None and pol.arrival_floor(t) > best:
+                    break
+            _, _, dag = heapq.heappop(pending)
+            self._admit_now(dag, t)
+
+    # -- the event loop -------------------------------------------------------
+    def step(self) -> Optional[Assignment]:
+        """One event: admit due arrivals, place one task. None when no
+        placeable work remains (drained, or only far-future arrivals that
+        were all admitted — impossible — so: fully drained)."""
+        self._admit_due()
+        eng = self.eng
+        if eng.done():
+            return None
+        tid = self.policy.step()
+        self.n_events += 1
+        a = eng.assignments[-1]
+        inst = self.instances[self._inst_of[tid]]
+        inst.remaining -= 1
+        if a.finish > inst.finish:
+            inst.finish = a.finish
+        if inst.remaining == 0:
+            inst.completed = True
+            self._live -= 1
+            self.completions.append((inst.name, inst.finish))
+            self._retire(inst)
+        return a
+
+    def _retire(self, inst: InstanceState) -> None:
+        # placed tasks' transfer plans are never consulted again — free the
+        # cached tuples so plan-cache memory follows the live set
+        for row in self.eng._plans.values():
+            for tid in range(inst.first_tid, inst.first_tid + inst.n_tasks):
+                row[tid] = None
+
+    def run(self) -> Schedule:
+        """Drain all pending arrivals and live work."""
+        while True:
+            if self.step() is None and not self._pending:
+                break
+        return self.schedule()
+
+    # -- elastic re-plan ------------------------------------------------------
+    def repool(self, new_pool: ResourcePool) -> None:
+        """Apply a grown/shrunk pool to the live run: engine state is
+        remapped/re-keyed (:meth:`OnlineEngine.repool`) and the policy run
+        rebinds its selector over the survivors. O(live ready set · |PE|)
+        on the next step — independent of total instances admitted."""
+        self.pool = new_pool
+        self.eng.repool(new_pool)
+        self.policy.rebind()
+
+    # -- results --------------------------------------------------------------
+    def schedule(self) -> Schedule:
+        return Schedule(self.eng.assignments, self.eng.pool, self.policy_name)
+
+    def result(self, label: str = "",
+               wall_seconds: float = 0.0) -> OnlineRunResult:
+        sched = self.schedule()
+        return OnlineRunResult(
+            label or self.eng.pool.describe(), self.policy_name,
+            sched.makespan, sched.mean_utilization, sched.total_energy,
+            sched.location_split(), sched, wall_seconds=wall_seconds,
+            n_events=self.n_events, max_live=self.max_live,
+            completions=list(self.completions))
+
+
+def run_online(workload: PipelineDAG, pool: ResourcePool,
+               cost: Optional[CostModel] = None, policy: str = "eft",
+               n_instances: int = 100, period: float = 0.0,
+               label: str = "", **policy_kw) -> OnlineRunResult:
+    """Streaming counterpart of :func:`repro.core.simulator.run_instances`:
+    submit ``n_instances`` copies of ``workload`` (one every ``period``
+    seconds) through the online driver. Produces byte-identical schedules
+    to the batch path for every policy (pinned by tests/test_online.py)."""
+    t0 = time.perf_counter()
+    drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
+    for i in range(n_instances):
+        drv.submit(workload.instance(i),
+                   arrival_t=i * period if period > 0 else 0.0)
+    drv.run()
+    return drv.result(label=label, wall_seconds=time.perf_counter() - t0)
+
+
+def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
+                         policy: str,
+                         admitted: Sequence[Tuple[PipelineDAG, float]],
+                         history: Sequence[Assignment],
+                         pending: Sequence[Tuple[PipelineDAG, float]] = (),
+                         loc_of: Optional[Mapping[str, str]] = None,
+                         **policy_kw) -> OnlineDriver:
+    """Rebuild a live driver on ``pool`` from the durable record — the
+    restart-from-scratch dual of :meth:`OnlineDriver.repool`.
+
+    ``admitted`` lists the (dag, arrival) instances the original run had
+    admitted, in admission order; ``history`` its placement record, in
+    placement order; ``pending`` any not-yet-admitted submissions.
+    ``loc_of`` maps PE names absent from ``pool`` (removed by an elastic
+    shrink) to their location, so their history can be replayed (see
+    :meth:`repro.core.schedulers.OnlineEngine.replay`). Continuing the
+    returned driver must produce the same remaining placements as the
+    repooled original — differentially tested in tests/test_online.py.
+    """
+    drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
+    for dag, t in admitted:
+        drv._admit_now(dag, t)
+    drv.eng.replay(history, loc_of)
+    drv.n_events = len(history)
+    # sync instance book-keeping with the replayed placements
+    finish = drv.eng._finish
+    for inst in drv.instances:
+        fins = [f for f in finish[inst.first_tid:inst.first_tid + inst.n_tasks]
+                if f is not None]
+        inst.remaining = inst.n_tasks - len(fins)
+        inst.finish = max(fins, default=0.0)
+        if inst.remaining == 0 and not inst.completed:
+            inst.completed = True
+            drv._live -= 1
+            drv.completions.append((inst.name, inst.finish))
+            drv._retire(inst)
+    # telemetry is rebuilt, not recovered: the original run's live-set
+    # high-water and completion (retirement) order are not in the durable
+    # record, so the high-water restarts from the current live set and
+    # replayed completions are ordered by completion time
+    drv.completions.sort(key=lambda c: (c[1], c[0]))
+    drv.max_live = drv._live
+    for dag, t in pending:
+        drv.submit(dag, t)
+    return drv

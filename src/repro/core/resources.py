@@ -144,6 +144,11 @@ class ResourcePool:
     def pe(self, name: str) -> ProcessingElement:
         return self._by_name[name]
 
+    def pe_or_none(self, name: str) -> Optional[ProcessingElement]:
+        """Like :meth:`pe` but ``None`` for unknown names — schedules that
+        outlive an elastic pool change reference PEs no longer present."""
+        return self._by_name.get(name)
+
     def by_location(self, location: str) -> List[ProcessingElement]:
         return [p for p in self.pes if p.location == location]
 
@@ -202,6 +207,14 @@ class ResourcePool:
     def subset(self, names: Iterable[str]) -> "ResourcePool":
         keep = set(names)
         return ResourcePool([p for p in self.pes if p.name in keep],
+                            list(self._links.values()),
+                            self.intra_location_bandwidth)
+
+    def without(self, names: Iterable[str]) -> "ResourcePool":
+        """Complement of :meth:`subset`: the pool minus the named PEs (the
+        elastic shrink primitive — drop dead/straggler PEs, keep links)."""
+        drop = set(names)
+        return ResourcePool([p for p in self.pes if p.name not in drop],
                             list(self._links.values()),
                             self.intra_location_bandwidth)
 

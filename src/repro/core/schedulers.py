@@ -79,12 +79,27 @@ workload, wall-clock for the full n-instance sweep on one core):
     PR 1 flat lazy heap         O(k stale revalidations,
                                 k ≈ |ready| at scale)    0.24 s  31 s       —
     PR 2 classes + offset heaps O(#newly-ready + log)    0.1 s   1.4 s   4.6 s
+    PR 3 online driver          O(log live + P) /event,
+    (streamed, period=5 s)      ~100 µs — tracks the
+                                *live* set, flat in n    0.23 s  1.5 s      —
+
+Online mode (PR 3): :class:`OnlineEngine` adds ``admit(dag, arrival_t)`` /
+``repool(new_pool)`` / ``replay(history)`` on top of this engine, and each
+policy is a :class:`_PolicyRun` strategy object whose ``step()`` the
+streaming driver (:mod:`repro.core.online`) interleaves with admissions.
+Per-event cost follows the live instance set, not the total admitted
+(n=100: 144 µs/event; n=1000: 96 µs/event at the same arrival rate), and
+the full online run stays within ~1.3× of the batch engine at n=1000 while
+never materialising the arrival map (BENCH_sched.json ``"online"``).
 
 Differential tests (`tests/test_sched_golden.py`,
 `tests/test_sched_classes.py`) pin byte-identical assignment lists against
 the frozen reference engine and golden aggregates captured from the seed;
-`benchmarks/bench_sched.py --check-golden` gates CI on both exactness and
-wall-time regressions.
+`tests/test_online.py` pins the streaming driver against the batch path
+(all 7 policies × arrival periods) and the elastic re-plan path against
+restart-from-history; `benchmarks/bench_sched.py --check-golden` and
+`benchmarks/bench_online.py --smoke` gate CI on exactness and wall-time
+regressions.
 """
 
 from __future__ import annotations
@@ -115,6 +130,20 @@ class Assignment:
     @property
     def duration(self) -> float:
         return self.finish - self.start
+
+
+def assignment_digest(assignments: Sequence["Assignment"]) -> str:
+    """sha256 fingerprint over the full assignment list — the single
+    byte-identity recipe shared by the golden tests
+    (tests/golden_sched.json), the online/batch parity tests and the CI
+    bench gates. Any change to the hashed projection invalidates every
+    recorded digest, so all consumers must go through this function."""
+    import hashlib
+    h = hashlib.sha256()
+    for a in assignments:
+        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
+                       a.comm_wait, a.energy)).encode())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
@@ -174,7 +203,9 @@ class Schedule:
         """Seconds each PE is busy. ``include_comm=False`` counts pure
         execution only (the paper's metric: "busy executing tasks");
         ``True`` additionally counts input-transfer stalls while the PE is
-        held by a dispatched task."""
+        held by a dispatched task. After an elastic shrink the schedule can
+        carry assignments on PEs no longer in the pool; those PEs appear
+        under their own name too."""
         self._refresh()
         if self._busy is None:
             self._busy = {}
@@ -182,8 +213,9 @@ class Schedule:
         if cached is None:
             cached = {p.name: 0.0 for p in self.pool.pes}
             for a in self.assignments:
-                cached[a.pe] += (a.duration if include_comm
-                                 else (a.duration - a.comm_wait))
+                cached[a.pe] = cached.get(a.pe, 0.0) + (
+                    a.duration if include_comm
+                    else (a.duration - a.comm_wait))
             self._busy[bool(include_comm)] = cached
         return dict(cached)
 
@@ -214,9 +246,11 @@ class Schedule:
         self._refresh()
         if self._split is None:
             split: Dict[str, int] = {}
-            pe = self.pool.pe
+            pe = self.pool.pe_or_none
             for a in self.assignments:
-                loc = pe(a.pe).location
+                p = pe(a.pe)
+                # PEs an elastic shrink removed still carry history
+                loc = p.location if p is not None else "(removed)"
                 split[loc] = split.get(loc, 0) + 1
             self._split = split
         return dict(self._split)
@@ -300,6 +334,10 @@ class _Engine:
         self.link_free: Dict[Tuple[str, str], float] = {}
         self._finish: List[Optional[float]] = [None] * n
         self._placed: List[Optional[int]] = [None] * n  # pe id
+        #: location string of the placed PE — kept separately from the pe id
+        #: because an elastic ``repool`` can remove a PE while its outputs
+        #: (and hence its successors' transfer plans) remain at its location
+        self._placed_loc: List[Optional[str]] = [None] * n
         self.assignments: List[Assignment] = []
         self._n_preds_left = [len(p) for p in di.preds]
         #: insertion-ordered ready set (dict-as-ordered-set; FIFO for RR)
@@ -369,13 +407,11 @@ class _Engine:
             if task.in_bytes > 0 and loc != home:
                 entries.append(((home, loc),
                                 transfer_time(home, loc, task.in_bytes)))
-            placed = self._placed
-            pe_loc = self._pi.pe_location
+            placed_loc = self._placed_loc
             for p in di.preds[tid]:
-                ppj = placed[p]
-                if ppj is None:
+                src = placed_loc[p]
+                if src is None:
                     raise KeyError(di.names[p])
-                src = pe_loc[ppj]
                 ob = di.tasks[p].out_bytes
                 if ob > 0 and src != loc:
                     entries.append(((src, loc), transfer_time(src, loc, ob)))
@@ -392,14 +428,13 @@ class _Engine:
         order — the order bookings are charged in). Callable once a task is
         ready (all predecessors placed); frozen from then on."""
         di = self._di
-        placed = self._placed
-        loc = self._pi.pe_loc_id
+        placed_loc = self._placed_loc
         tasks = di.tasks
         parts = []
         for p in di.preds[tid]:
             ob = tasks[p].out_bytes
             if ob > 0:
-                parts.append((loc[placed[p]], ob))
+                parts.append((placed_loc[p], ob))
         return (tasks[tid].in_bytes, tuple(parts))
 
     # -- timing queries (int-id fast path) ------------------------------------
@@ -572,6 +607,7 @@ class _Engine:
             self.dirty.bump_pe(pj)
         self._finish[tid] = f
         self._placed[tid] = pj
+        self._placed_loc[tid] = self._pi.pe_location[pj]
         try:
             del self._ready[tid]
         except KeyError:
@@ -950,9 +986,11 @@ class _ClassedBest:
         if not members:
             del self._by_sig[cls.sig]
 
-    def _pop_off(self, k: Tuple, pj: int) -> Optional[Tuple[int, int]]:
+    def _pop_off(self, k: Tuple, pj: int,
+                 accept: bool = True) -> Optional[Tuple[int, int]]:
         """Process a surfaced F-offset-sub-heap advert; None means 'fixed
-        something, rescan the top'."""
+        something, rescan the top'. ``accept=False`` (peek): on success the
+        candidate is left in place and its advert re-pushed."""
         sub = self._offs[pj]
         comps, cid, gen, head_tid = sub[0]
         cls = self._classes[cid]
@@ -973,14 +1011,18 @@ class _ClassedBest:
             # current materialisation (heap order is unaffected)
             self._advertise_off(pj, force=True)
             return None
+        if not accept:
+            self._adv[pj] = k
+            heapq.heappush(self._top, (k, pj))
+            return tid, pj
         self._accept(cls)
         if not members:
             heapq.heappop(sub)
         self._advertise_off(pj, force=True)
         return tid, pj
 
-    def _pop_link(self, k: Tuple, tag: Tuple[int, Tuple[str, str]]
-                  ) -> Optional[Tuple[int, int]]:
+    def _pop_link(self, k: Tuple, tag: Tuple[int, Tuple[str, str]],
+                  accept: bool = True) -> Optional[Tuple[int, int]]:
         """Process a surfaced joint-base offset-heap advert. Membership is
         permanent (r ≤ max(lf, F) can never un-hold), so the only fix-ups
         are head advances and base advances — never eviction."""
@@ -1002,13 +1044,18 @@ class _ClassedBest:
             # a base horizon advanced since this advert
             self._advertise_link(tag, force=True)
             return None
+        if not accept:
+            self._adv[tag] = k
+            heapq.heappush(self._top, (k, tag))
+            return tid, tag[0]
         self._accept(cls)
         if not members:
             heapq.heappop(sub)
         self._advertise_link(tag, force=True)
         return tid, tag[0]
 
-    def _pop_abs(self, k: Tuple) -> Optional[Tuple[int, int]]:
+    def _pop_abs(self, k: Tuple,
+                 accept: bool = True) -> Optional[Tuple[int, int]]:
         """Process a surfaced absolute-heap advert (PR 1's lazy validation,
         plus lazy migration into offset form when horizons crossed)."""
         eng = self._eng
@@ -1028,6 +1075,10 @@ class _ClassedBest:
         else:
             cur = self._key(tid, pj)
         if cur == ek:
+            if not accept:
+                self._adv[-1] = k
+                heapq.heappush(self._top, (k, -1))
+                return tid, pj
             self._accept(cls)
             if not members:
                 heapq.heappop(heap)
@@ -1085,6 +1136,285 @@ class _ClassedBest:
             if got is not None:
                 return got
 
+    def peek_best(self) -> Optional[Tuple]:
+        """The current best candidate's *exact* full key, without consuming
+        it (None when no candidate is advertised).
+
+        Settles the top of the heap exactly like :meth:`pop_best` — retired
+        gens, head advances and stale materialisations are fixed as a side
+        effect — but leaves the winning candidate in place and re-pushes
+        its advert, so a following ``pop_best`` revalidates it in O(1).
+        The online driver's admission gate compares this key against the
+        key floor of the next pending arrival: if the floor is larger, no
+        task of that (or any later) instance can affect the next pop."""
+        top = self._top
+        adv = self._adv
+        heappop = heapq.heappop
+        while True:
+            if not top:
+                return None
+            k, tag = top[0]
+            if adv.get(tag) is not k:
+                heappop(top)
+                continue
+            heappop(top)
+            if tag.__class__ is int:
+                got = (self._pop_abs(k, accept=False) if tag < 0
+                       else self._pop_off(k, tag, accept=False))
+            else:
+                got = self._pop_link(k, tag, accept=False)
+            if got is not None:
+                return k
+
+
+# ---------------------------------------------------------------------------
+# Online engine — incremental admission + elastic re-plan
+# ---------------------------------------------------------------------------
+
+class _GrowableIndex:
+    """List-backed, growable mirror of :class:`repro.core.dag.DAGIndex`.
+
+    Same attribute shape as the frozen index, so every engine fast path
+    (``di.tasks[tid]``, ``di.preds[tid]``, ...) indexes it unchanged; only
+    :meth:`OnlineEngine.admit` may extend it (in place — closures bound to
+    these lists stay valid across admissions)."""
+
+    __slots__ = ("tasks", "names", "id_of", "preds", "succs", "topo")
+
+    def __init__(self) -> None:
+        self.tasks: List[Task] = []
+        self.names: List[str] = []
+        self.id_of: Dict[str, int] = {}
+        self.preds: List[Tuple[int, ...]] = []
+        self.succs: List[Tuple[int, ...]] = []
+        self.topo: List[int] = []
+
+
+class OnlineEngine(_Engine):
+    """The incremental engine, opened up for *online* operation.
+
+    Instead of one frozen problem, the engine starts empty and grows by
+    whole pipeline instances via :meth:`admit` — the paper's workload
+    manager receives instances over time and dispatches tasks as resources
+    free up. Three properties of the batch engine make this a pure
+    extension (no re-keying of live state):
+
+      * ``ready_at`` is frozen per ready task and every policy key is
+        monotone, so candidates already in the selector are unaffected by
+        new tasks appearing;
+      * all per-task state is dense-id indexed and append-only
+        (``_arr``/``_finish``/``_placed``/plan rows/cost tables), and the
+        hot-path closures bind the list *objects*, which are extended in
+        place;
+      * candidate-class signatures use a persistent row-identity registry,
+        so instances admitted in different batches still collapse into
+        shared classes.
+
+    :meth:`repool` is the elastic re-plan path (pool grown/shrunk mid-run):
+    horizons are remapped by PE name, transfer plans and link horizons for
+    vanished locations are dropped, cost tables are rebuilt for the new PE
+    set, and the full ready set is marked newly-ready so a rebound policy
+    run re-advertises every live candidate. :meth:`replay` is the dual
+    restart-from-history path (rebuild identical scheduler state on a new
+    engine from the durable assignment record) — the two are differentially
+    tested against each other in tests/test_online.py.
+    """
+
+    def __init__(self, pool: ResourcePool, cost: CostModel,
+                 contended_links: bool = True) -> None:
+        super().__init__(PipelineDAG("online"), pool, cost, arrival=None,
+                         contended_links=contended_links)
+        self._di = _GrowableIndex()  # replaces the (empty) frozen index
+        #: persistent row-identity registries (row bytes → id): tasks
+        #: admitted in different batches share class signatures iff their
+        #: cost rows are bit-identical
+        self._row_seen: Dict[bytes, int] = {}
+        self._erow_seen: Dict[bytes, int] = {}
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, dag: PipelineDAG, arrival_t: float = 0.0) -> List[int]:
+        """Fold a whole pipeline instance into the live problem at
+        ``arrival_t`` (every task's arrival floor). Returns the new dense
+        task ids (contiguous). O(instance size · |PE|), independent of how
+        many tasks were admitted before."""
+        idx = dag.index()
+        di = self._di
+        id_of = di.id_of
+        for nm in idx.names:
+            if nm in id_of:
+                raise ValueError(f"duplicate task {nm!r} in online admission")
+        arrival_t = float(arrival_t)
+        base = len(di.names)
+        di.tasks.extend(idx.tasks)
+        for i, nm in enumerate(idx.names):
+            id_of[nm] = base + i
+        di.names.extend(idx.names)
+        di.preds.extend(tuple(base + p for p in row) for row in idx.preds)
+        di.succs.extend(tuple(base + s for s in row) for row in idx.succs)
+        di.topo.extend(base + t for t in idx.topo)
+        n_new = len(idx.names)
+        self._arr.extend([arrival_t] * n_new)
+        self._finish.extend([None] * n_new)
+        self._placed.extend([None] * n_new)
+        self._placed_loc.extend([None] * n_new)
+        self._ready_at.extend([None] * n_new)
+        self._n_preds_left.extend(len(row) for row in idx.preds)
+        for row in self._plans.values():
+            row.extend([None] * n_new)
+        if self._exec_tbl is not None:
+            E = self.cost.exec_time_batch(idx.tasks, self._pi.pes)
+            self._exec_tbl.extend(E.tolist())
+            self._exec_row_ids.extend(row_ids(E, self._row_seen))
+            if self._energy_tbl is not None:
+                import numpy as np
+                power = np.asarray([p.power_busy for p in self._pi.pes],
+                                   dtype=np.float64)
+                En = E * power[None, :]
+                self._energy_tbl.extend(En.tolist())
+                self._energy_row_ids.extend(row_ids(En, self._erow_seen))
+        ready = self._ready
+        ready_at = self._ready_at
+        npl = self._n_preds_left
+        newly = self._newly
+        for t in idx.topo:
+            tid = base + t
+            if npl[tid] == 0:
+                ready[tid] = None
+                ready_at[tid] = arrival_t
+                newly.append(tid)
+        return list(range(base, base + n_new))
+
+    # -- elastic re-plan ------------------------------------------------------
+    def repool(self, new_pool: ResourcePool) -> None:
+        """Adapt live scheduler state to a grown/shrunk pool.
+
+        Placement history is preserved: finished/placed tasks keep their
+        recorded times, and tasks placed on since-removed PEs keep their
+        *location* (``_placed_loc``), which is all downstream transfer
+        planning needs. Mutable horizons are remapped by PE name (new PEs
+        start free at 0.0); link horizons and cached transfer plans that
+        reference vanished locations are dropped, and remaining plans are
+        rebuilt lazily against the new pool's link matrix.
+
+        Contract: key closures and selectors capture the replaced
+        ``pe_free`` array and cost tables — callers must rebind their
+        policy run afterwards (``_PolicyRun.rebind``; ``OnlineDriver.repool``
+        does both). The full ready set is re-marked newly-ready so the
+        rebuilt selector re-advertises every live candidate.
+        """
+        old_pi = self._pi
+        new_pi = new_pool.index()
+        old_free = {p.name: self._pe_free[j] for j, p in enumerate(old_pi.pes)}
+        self.pool = new_pool
+        self._pi = new_pi
+        self.n_pes = len(new_pi.pes)
+        self._pe_free = [old_free.get(p.name, 0.0) for p in new_pi.pes]
+        # keep horizons for links still in the new pool's matrix — a link
+        # stays in use while any surviving plan can route over it (e.g. the
+        # data-home upload link when every data-home PE was removed); drop
+        # only links that vanished from the matrix itself
+        new_links = new_pi.links
+        self.link_free = {lk: v for lk, v in self.link_free.items()
+                          if lk in new_links}
+        self._plans = {}
+        self.dirty = DirtyHorizons(new_pi)
+        self._exec_memo.clear()
+        self._energy_memo.clear()
+        idx_of = new_pi.idx_of
+        old_pes = old_pi.pes
+        self._placed = [None if pj is None else idx_of.get(old_pes[pj].name)
+                        for pj in self._placed]
+        if self._exec_tbl is not None:
+            # rebuild for the new PE set — identical floats to a fresh
+            # engine on this pool (the restart-differential invariant)
+            E = self.cost.exec_time_batch(self._di.tasks, new_pi.pes)
+            self._exec_tbl = E.tolist()
+            self._row_seen = {}
+            self._exec_row_ids = row_ids(E, self._row_seen)
+            if self._energy_tbl is not None:
+                import numpy as np
+                power = np.asarray([p.power_busy for p in new_pi.pes],
+                                   dtype=np.float64)
+                En = E * power[None, :]
+                self._energy_tbl = En.tolist()
+                self._erow_seen = {}
+                self._energy_row_ids = row_ids(En, self._erow_seen)
+        self._newly = list(self._ready)
+
+    # -- restart-from-history -------------------------------------------------
+    def replay(self, assignments: Sequence[Assignment],
+               loc_of: Optional[Mapping[str, str]] = None) -> None:
+        """Re-apply a placement history (in its original order) to rebuild
+        scheduler state on this engine — the recovery path: a fresh engine
+        plus the durable assignment record reconstructs exactly the live
+        state the original engine carried.
+
+        Every replayed task must belong to an admitted instance. History
+        on PEs present in this pool is re-placed for real (transfers
+        re-booked, finish times re-derived and checked against the record);
+        history on PEs *not* in this pool — removed by an elastic shrink —
+        needs ``loc_of[pe_name]`` to recover the location its outputs live
+        at, trusts the recorded times, and re-books its input transfers on
+        surviving links. Assumes link parameters of surviving locations are
+        unchanged from when the history was recorded."""
+        idx_of = self._pi.idx_of
+        for a in assignments:
+            tid = self._di.id_of[a.task]
+            pj = idx_of.get(a.pe)
+            if pj is not None:
+                got = self._place_i(tid, pj, start=a.start)
+                if got.finish != a.finish:
+                    raise ValueError(
+                        f"replay diverged on {a.task!r}: recomputed finish "
+                        f"{got.finish!r} != recorded {a.finish!r}")
+            else:
+                if loc_of is None or a.pe not in loc_of:
+                    raise KeyError(
+                        f"PE {a.pe!r} is not in the pool; pass loc_of with "
+                        f"its location to replay across an elastic shrink")
+                self._replay_ghost(tid, a, loc_of[a.pe])
+        self._newly = list(self._ready)
+
+    def _replay_ghost(self, tid: int, a: Assignment, loc: str) -> None:
+        """Replay a task that ran on a PE that has since left the pool:
+        trust the recorded times, but re-book its input transfers on links
+        still in the pool's matrix (they occupied shared links that
+        surviving placements contend on)."""
+        hold = a.start
+        if self.contended_links:
+            try:
+                plan = self._plan(tid, loc)
+            except KeyError:
+                # a link into this task's location left the matrix — its
+                # bookings no longer constrain anyone (repool drops those
+                # horizons too)
+                plan = ()
+            if plan:
+                lf = self.link_free
+                for lk, dur in plan:
+                    s = lf.get(lk, 0.0)
+                    if s < hold:
+                        s = hold
+                    lf[lk] = s + dur
+                loc_id = self._pi.loc_id.get(loc)
+                if loc_id is not None:
+                    self.dirty.bump_location(loc_id)
+        self.assignments.append(dataclasses.replace(a))
+        self._finish[tid] = a.finish
+        self._placed_loc[tid] = loc
+        try:
+            del self._ready[tid]
+        except KeyError:
+            raise ValueError(f"task {a.task!r} is not ready") from None
+        npl = self._n_preds_left
+        ready = self._ready
+        newly = self._newly
+        for s in self._di.succs[tid]:
+            npl[s] -= 1
+            if npl[s] == 0:
+                ready[s] = None
+                newly.append(s)
+
 
 # ---------------------------------------------------------------------------
 # Policies
@@ -1095,44 +1425,584 @@ def _rank(dag: PipelineDAG, pool: ResourcePool, cost: CostModel) -> Dict[str, fl
                            lambda t: cost.mean_comm_time(t, pool))
 
 
+# ---------------------------------------------------------------------------
+# Policy runs — one strategy object per policy over the shared engine
+# ---------------------------------------------------------------------------
+
+class _PolicyRun:
+    """One policy driving one engine, one placement per :meth:`step`.
+
+    The batch entry points (:func:`schedule_eft` & co.) construct the run,
+    feed it the whole problem via :meth:`on_admit` and call :meth:`run` —
+    byte-identical to the pre-refactor closures. The online driver
+    (:mod:`repro.core.online`) instead interleaves :meth:`step` with engine
+    admissions (:meth:`OnlineEngine.admit` + :meth:`on_admit`) and elastic
+    pool changes (:meth:`OnlineEngine.repool` + :meth:`rebind`), gating
+    each admission on :meth:`peek_time` / :meth:`arrival_floor`: a pending
+    instance may stay unadmitted exactly while its arrival-time key floor
+    exceeds the current best candidate's key — then none of its tasks can
+    win (or even tie) the next pop, so deferred admission provably places
+    the same sequence as the batch run.
+    """
+
+    policy_name = ""
+    #: False → selection ignores candidate timing (RR's readiness FIFO,
+    #: HEFT's global rank pass), so no arrival-time key floor exists and
+    #: the online driver must admit every pending instance before placing.
+    deferrable = True
+
+    def __init__(self, eng: _Engine) -> None:
+        self.eng = eng
+
+    def on_admit(self, dag: PipelineDAG) -> None:
+        """Fold per-task policy state (ranks, value curves) for a newly
+        admitted DAG — once per admission, in admission order, before the
+        next :meth:`step`."""
+
+    def rebind(self) -> None:
+        """Invalidate closures/selectors after :meth:`OnlineEngine.repool`
+        (they capture the replaced ``pe_free`` array and cost tables)."""
+
+    def peek_time(self) -> Optional[float]:
+        """Leading (time-like) component of the current best candidate's
+        key; None when no candidate exists."""
+        raise NotImplementedError
+
+    def arrival_floor(self, t: float) -> float:
+        """Lower bound of the leading key component over every candidate an
+        instance arriving at ``t`` could ever contribute (all its tasks
+        have ``ready_at >= t``, and keys are monotone in time)."""
+        return t
+
+    def step(self) -> int:
+        """Place exactly one task; returns its tid."""
+        raise NotImplementedError
+
+    def run(self) -> None:
+        eng = self.eng
+        step = self.step
+        while not eng.done():
+            step()
+
+
+class _ClassedRun(_PolicyRun):
+    """(task, PE)-keyed policies on the :class:`_ClassedBest` selector.
+
+    The selector (and the key closures inside it) is built lazily on first
+    use — after :meth:`on_admit` has produced rank/value state — and
+    dropped on :meth:`rebind`, so a repool transparently rebuilds it over
+    the surviving pool and the re-marked ready set."""
+
+    def __init__(self, eng: _Engine) -> None:
+        super().__init__(eng)
+        self.sel: Optional[_ClassedBest] = None
+
+    def rebind(self) -> None:
+        self.sel = None
+
+    def _selector_parts(self) -> Tuple:
+        raise NotImplementedError
+
+    def _selector(self) -> _ClassedBest:
+        sel = self.sel
+        if sel is None:
+            key, sigfn, offfn, shift = self._selector_parts()
+            self.sel = sel = _ClassedBest(self.eng, key, sigfn, offfn, shift)
+        return sel
+
+    def step(self) -> int:
+        sel = self._selector()
+        sel.push_ready()
+        tid, pj = sel.pop_best()
+        self.eng._place_i(tid, pj)
+        return tid
+
+    def peek_time(self) -> Optional[float]:
+        sel = self._selector()
+        sel.push_ready()
+        k = sel.peek_best()
+        return None if k is None else k[0]
+
+
+class _RankedClassedRun(_ClassedRun):
+    """Classed runs whose keys carry the HEFT-style upward rank."""
+
+    def __init__(self, eng: _Engine) -> None:
+        super().__init__(eng)
+        #: -upward_rank per tid, extended in admission order. Closures bind
+        #: the list object; it is only ever extended in place, so live
+        #: selectors see new tasks without rebinding. Ranks are intra-DAG
+        #: (merged problems have no cross-instance edges), so per-instance
+        #: computation yields the same floats as one pass over the merge.
+        self.neg_rank: List[float] = []
+        self._dags: List[PipelineDAG] = []
+
+    def on_admit(self, dag: PipelineDAG) -> None:
+        self._dags.append(dag)
+        rank = _rank(dag, self.eng.pool, self.eng.cost)
+        self.neg_rank.extend(-rank[nm] for nm in dag.index().names)
+
+    def rebind(self) -> None:
+        # upward rank averages exec/comm cost over the pool's PEs, so it is
+        # pool-dependent: an elastic re-plan re-ranks every admitted DAG
+        # against the surviving pool — exactly what a restart-from-history
+        # run computes, which is what the two paths are differentially
+        # pinned against
+        super().rebind()
+        neg: List[float] = []
+        for dag in self._dags:
+            rank = _rank(dag, self.eng.pool, self.eng.cost)
+            neg.extend(-rank[nm] for nm in dag.index().names)
+        self.neg_rank = neg
+
+
+class _EftRun(_RankedClassedRun):
+    policy_name = "eft"
+
+    def _selector_parts(self) -> Tuple:
+        eng = self.eng
+        names = eng._di.names
+        neg_rank = self.neg_rank
+        fin = eng._finish_fn()
+
+        def key(tid: int, pj: int) -> Tuple:
+            return (fin(tid, pj), neg_rank[tid], names[tid], pj)
+
+        # tasks with equal exec rows and equal rank are key-identical up to
+        # name
+        rows = eng._exec_row_ids
+        sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
+                 if rows is not None else None)
+        off_base = eng._off_base
+
+        def offfn(tid: int, pj: int, base: float) -> Tuple:
+            # saturated key = (base + off_base, neg_rank, name, pj)
+            return (off_base(tid, pj), neg_rank[tid])
+
+        return key, sigfn, offfn, (2,)
+
+
+class _HwangRun(_RankedClassedRun):
+    policy_name = "etf_hwang"
+
+    def _selector_parts(self) -> Tuple:
+        eng = self.eng
+        names = eng._di.names
+        neg_rank = self.neg_rank
+        start_fin = eng._start_finish_fn()
+
+        def key(tid: int, pj: int) -> Tuple:
+            # earliest start; break ties toward shorter finish, then rank
+            hold, finish = start_fin(tid, pj)
+            return (hold, finish, neg_rank[tid], names[tid], pj)
+
+        rows = eng._exec_row_ids
+        sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
+                 if rows is not None else None)
+        off_base = eng._off_base
+
+        def offfn(tid: int, pj: int, base: float) -> Tuple:
+            # saturated key = (pe_free, base + off_base, neg_rank, name, pj)
+            return (0.0, off_base(tid, pj), neg_rank[tid])
+
+        return key, sigfn, offfn, (1, 2)
+
+
+class _MinminRun(_ClassedRun):
+    policy_name = "minmin"
+
+    def _selector_parts(self) -> Tuple:
+        eng = self.eng
+        names = eng._di.names
+        fin = eng._finish_fn()
+
+        # Min-Min picks the task whose *best-PE* finish is smallest; the
+        # global (finish, name, pe) minimum over all pairs is exactly that
+        # task on exactly that PE, so one selector covers both
+        # minimisations.
+        def key(tid: int, pj: int) -> Tuple:
+            return (fin(tid, pj), names[tid], pj)
+
+        rows = eng._exec_row_ids
+        sigfn = (lambda tid: rows[tid]) if rows is not None else None
+        off_base = eng._off_base
+
+        def offfn(tid: int, pj: int, base: float) -> Tuple:
+            # saturated key = (base + off_base, name, pj)
+            return (off_base(tid, pj),)
+
+        return key, sigfn, offfn, (2,)
+
+
+class _VosRun(_ClassedRun):
+    policy_name = "vos"
+
+    def __init__(self, eng: _Engine,
+                 value_fn: Optional[Callable[[Task, float], float]] = None,
+                 energy_weight: float = 1e-4) -> None:
+        super().__init__(eng)
+        self._custom = value_fn is not None
+        self.value_fn = value_fn
+        self.energy_weight = energy_weight
+        self.hard: Optional[float] = None
+        self._decay: Optional[Callable[[float], float]] = None
+        self._first_dag: Optional[PipelineDAG] = None
+
+    @property
+    def deferrable(self) -> bool:
+        # a custom curve may inspect the task (no uniform arrival floor);
+        # a negative energy weight would break key0 >= -decay(t)
+        return not self._custom and self.energy_weight >= 0
+
+    def _build_default_curve(self, dag: PipelineDAG) -> None:
+        from repro.core import vos as vos_mod
+        rank = _rank(dag, self.eng.pool, self.eng.cost)
+        horizon = max(rank.values()) * 2.0 + 1e-9
+        self.hard = hard = horizon * 4
+        soft = horizon / 2
+
+        def decay(f: float) -> float:
+            return vos_mod.linear_decay(f, soft=soft, hard=hard)
+
+        self._decay = decay
+        self.value_fn = lambda t, f: decay(f)
+
+    def on_admit(self, dag: PipelineDAG) -> None:
+        if self._custom or self._decay is not None:
+            # the default curve is frozen at first admission: all instances
+            # of one template share the critical-path horizon (the batch
+            # path admits the whole merged problem in one call)
+            return
+        self._first_dag = dag
+        self._build_default_curve(dag)
+
+    def rebind(self) -> None:
+        super().rebind()
+        if not self._custom and self._first_dag is not None:
+            # the default horizon is a pool-derived heuristic (mean exec
+            # times over the pool's PEs), so an elastic re-plan re-derives
+            # it from the surviving pool — matching restart-from-history.
+            # Pool-independent SLO curves belong in a custom value_fn.
+            self._build_default_curve(self._first_dag)
+
+    def arrival_floor(self, t: float) -> float:
+        # any candidate from an instance arriving at t has finish >= t, a
+        # value <= decay(t) (the curve is non-increasing) and a
+        # non-negative energy term, so key[0] = -vos_rate >= -decay(t)
+        return -self._decay(t)
+
+    def _selector_parts(self) -> Tuple:
+        eng = self.eng
+        di = eng._di
+        names = di.names
+        tasks = di.tasks
+        fin = eng._finish_fn()
+        energy = eng._energy
+        value_fn = self.value_fn
+        ew = self.energy_weight
+
+        def key(tid: int, pj: int) -> Tuple:
+            f = fin(tid, pj)
+            vos_rate = value_fn(tasks[tid], f) - ew * energy(tid, pj)
+            return (-vos_rate, f, names[tid], pj)
+
+        rows = eng._exec_row_ids
+        erows = eng._energy_row_ids
+        sigfn = ((lambda tid: (rows[tid], erows[tid]))
+                 if not self._custom and rows is not None
+                 and erows is not None else None)
+        # -value_fn(finish) is nonlinear in finish, so saturated keys are
+        # not base + constant in general — but past the hard deadline the
+        # default curve is pinned at exactly 0 and the key degenerates to
+        # (energy_weight·energy, finish, name, pj): comp0 static, comp1
+        # offset. finish only grows, so 'minimum finish ≥ hard' holds
+        # forever. At instance counts where scaling matters the bulk of the
+        # run is past the deadline; earlier candidates stay on the
+        # absolute lazy path.
+        offfn = None
+        if not self._custom:
+            off_base = eng._off_base
+            hard = self.hard
+
+            def offfn(tid: int, pj: int, base: float) -> Optional[Tuple]:
+                s = off_base(tid, pj)
+                if base + s < hard:
+                    return None
+                return (ew * energy(tid, pj), s)
+
+        return key, sigfn, offfn, (0, 2)
+
+
+class _EtfRun(_PolicyRun):
+    """ETF — FIFO by frozen ``ready_at`` + best-PE placement (see
+    :func:`schedule_etf`). Task selection needs no lazy revalidation: the
+    outer heap holds each *distinct* ready_at value once and the name
+    tie-break is resolved through the per-value bucket, so only the
+    O(|PE|) best-PE scan runs per placement."""
+
+    policy_name = "etf"
+
+    def __init__(self, eng: _Engine) -> None:
+        super().__init__(eng)
+        self._fin: Optional[Callable[[int, int], float]] = None
+        self._pe_names: List[str] = []
+        self._heap: List[float] = []   # distinct ready_at values
+        self._buckets: Dict[float, List[Tuple[str, int]]] = {}
+
+    def rebind(self) -> None:
+        # repool re-marked the full ready set newly-ready — rebuild the
+        # readiness structure from scratch so nothing is double-inserted
+        self._fin = None
+        self._heap = []
+        self._buckets = {}
+
+    def _drain(self) -> None:
+        eng = self.eng
+        names = eng._di.names
+        heap = self._heap
+        buckets = self._buckets
+        for tid in eng.take_newly_ready():
+            r = eng._ready_at_i(tid)
+            b = buckets.get(r)
+            if b is None:
+                buckets[r] = [(names[tid], tid)]
+                heapq.heappush(heap, r)
+            else:
+                heapq.heappush(b, (names[tid], tid))
+
+    def peek_time(self) -> Optional[float]:
+        self._drain()
+        return self._heap[0] if self._heap else None
+
+    def step(self) -> int:
+        eng = self.eng
+        if self._fin is None:
+            self._fin = eng._finish_fn()
+            self._pe_names = [p.name for p in eng._pi.pes]
+        fin = self._fin
+        self._drain()
+        heap = self._heap
+        r = heap[0]
+        b = self._buckets[r]
+        _, tid = heapq.heappop(b)
+        if not b:
+            heapq.heappop(heap)
+            del self._buckets[r]
+        pe_names = self._pe_names
+        best_pj = min(range(eng.n_pes),
+                      key=lambda pj: (fin(tid, pj), pe_names[pj]))
+        eng._place_i(tid, best_pj)
+        return tid
+
+
+class _RrRun(_PolicyRun):
+    policy_name = "rr"
+    deferrable = False
+
+    def __init__(self, eng: _Engine) -> None:
+        super().__init__(eng)
+        self._cycle = None
+
+    def rebind(self) -> None:
+        # the PE cycle is positional: after a pool change it restarts from
+        # PE 0, matching a run rebuilt from history (which also starts a
+        # fresh cycle for the placements that remain)
+        self._cycle = None
+
+    def peek_time(self) -> Optional[float]:
+        return None
+
+    def step(self) -> int:
+        eng = self.eng
+        if self._cycle is None:
+            self._cycle = itertools.cycle(range(eng.n_pes))
+        eng.take_newly_ready()  # keep the newly-ready buffer bounded
+        tid = next(iter(eng._ready))  # FIFO
+        eng._place_i(tid, next(self._cycle))
+        return tid
+
+
+class _HeftRun(_PolicyRun):
+    """HEFT with insertion-based slot filling (see :func:`schedule_heft`).
+
+    Not a ready-set loop: a single pass in global (-rank, name) order, so
+    admissions re-rank the remaining pass and a repool rebuilds the per-PE
+    realised-slot arrays from the placement history."""
+
+    policy_name = "heft"
+    deferrable = False
+
+    def __init__(self, eng: _Engine) -> None:
+        super().__init__(eng)
+        self.neg_rank: List[float] = []
+        self._dags: List[PipelineDAG] = []
+        self._state: Optional[Tuple] = None
+        self._cursor = 0
+
+    def on_admit(self, dag: PipelineDAG) -> None:
+        self._dags.append(dag)
+        rank = _rank(dag, self.eng.pool, self.eng.cost)
+        self.neg_rank.extend(-rank[nm] for nm in dag.index().names)
+        self._state = None  # re-rank the remaining pass over the grown set
+
+    def rebind(self) -> None:
+        # re-rank against the surviving pool (rank is pool-dependent — see
+        # _RankedClassedRun.rebind) and rebuild the slot arrays
+        self._state = None
+        neg: List[float] = []
+        for dag in self._dags:
+            rank = _rank(dag, self.eng.pool, self.eng.cost)
+            neg.extend(-rank[nm] for nm in dag.index().names)
+        self.neg_rank = neg
+
+    def peek_time(self) -> Optional[float]:
+        return None
+
+    @staticmethod
+    def _insertion_start(st: List[float], fn: List[float], pm: List[float],
+                         ready_t: float, dur: float) -> float:
+        """Earliest gap ≥ dur after ready_t on the PE (or after last job).
+
+        Slots ending at or before ``ready_t`` can neither host the task nor
+        move the probe beyond their max finish, so the gap scan starts at
+        the first slot beginning after ``ready_t`` (bisect + finish
+        prefix-max) instead of rescanning the prefix."""
+        if dur > 0 and st:
+            i0 = bisect.bisect_right(st, ready_t)
+            p = pm[i0]
+            t = ready_t if ready_t >= p else p
+        else:
+            i0 = 0
+            t = ready_t
+        for k in range(i0, len(st)):
+            if t + dur <= st[k]:
+                return t
+            f = fn[k]
+            if f > t:
+                t = f
+        return t
+
+    def _ensure(self) -> None:
+        if self._state is not None:
+            return
+        eng = self.eng
+        names = eng._di.names
+        neg_rank = self.neg_rank
+        # rank order guarantees predecessors are placed before successors
+        # (rank(pred) > rank(task) along edges); ties break by name — the
+        # same (-rank, name) order as the one-shot pass
+        order = sorted(range(len(names)),
+                       key=lambda tid: (neg_rank[tid], names[tid]))
+        n_pes = eng.n_pes
+        neg_inf = float("-inf")
+        starts: List[List[float]] = [[] for _ in range(n_pes)]
+        fins: List[List[float]] = [[] for _ in range(n_pes)]
+        slots: List[List[Tuple[float, float]]] = [[] for _ in range(n_pes)]
+        prefmax: List[List[float]] = [[neg_inf] for _ in range(n_pes)]
+        # rebuild realised slots from the placement history (empty on a
+        # fresh batch run; populated when resuming after replay/repool)
+        idx_of = eng._pi.idx_of
+        per_pj: List[List[Tuple[float, float]]] = [[] for _ in range(n_pes)]
+        for a in eng.assignments:
+            pj = idx_of.get(a.pe)
+            if pj is not None:
+                per_pj[pj].append((a.start, a.finish))
+        for pj in range(n_pes):
+            per_pj[pj].sort()
+            pm = prefmax[pj]
+            for s, f in per_pj[pj]:
+                slots[pj].append((s, f))
+                starts[pj].append(s)
+                fins[pj].append(f)
+                pm.append(f if f > pm[-1] else pm[-1])
+        self._state = (order, starts, fins, slots, prefmax)
+        self._cursor = 0
+
+    def step(self) -> int:
+        self._ensure()
+        eng = self.eng
+        order, starts, fins, slots, prefmax = self._state
+        finish = eng._finish
+        cursor = self._cursor
+        while finish[order[cursor]] is not None:
+            cursor += 1
+        self._cursor = cursor + 1
+        tid = order[cursor]
+        nm = eng._di.names[tid]
+        ready_t = eng._ready_at_i(tid)
+        pe_free = eng._pe_free
+        best = None
+        for pj in range(eng.n_pes):
+            # estimated duration including (unbooked) transfer stall
+            pf = pe_free[pj]
+            s_probe = ready_t if ready_t >= pf else pf
+            dur = (eng._exec_start_i(tid, pj, s_probe) - s_probe
+                   + eng._exec(tid, pj))
+            s = self._insertion_start(starts[pj], fins[pj], prefmax[pj],
+                                      ready_t, dur)
+            key = (s + dur, nm)
+            if best is None or key < best[:2]:
+                best = (*key, pj, s)
+        pj, s = best[2], best[3]
+        a = eng._place_i(tid, pj, start=s)
+        # insert the realised slot, keeping (start, finish) order and the
+        # finish prefix-max in sync
+        slot = (a.start, a.finish)
+        pos = bisect.bisect(slots[pj], slot)
+        slots[pj].insert(pos, slot)
+        starts[pj].insert(pos, a.start)
+        fins[pj].insert(pos, a.finish)
+        pm = prefmax[pj]
+        pm.insert(pos + 1, 0.0)
+        fn = fins[pj]
+        for k in range(pos, len(fn)):
+            prev = pm[k]
+            f = fn[k]
+            pm[k + 1] = f if f > prev else prev
+        eng.take_newly_ready()  # heft ignores the ready frontier
+        return tid
+
+
+_POLICY_RUNS: Dict[str, type] = {
+    "rr": _RrRun,
+    "etf": _EtfRun,
+    "etf_hwang": _HwangRun,
+    "eft": _EftRun,
+    "heft": _HeftRun,
+    "minmin": _MinminRun,
+    "vos": _VosRun,
+}
+
+
+def make_policy_run(policy: str, eng: _Engine, **kw) -> _PolicyRun:
+    """Construct the strategy object for ``policy`` over ``eng`` (the
+    online driver's entry point into the policy layer)."""
+    try:
+        cls = _POLICY_RUNS[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; one of {sorted(_POLICY_RUNS)}")
+    return cls(eng, **kw)
+
+
+def _run_batch(policy: str, dag: PipelineDAG, pool: ResourcePool,
+               cost: CostModel, arrival: Optional[Mapping[str, float]],
+               **kw) -> Schedule:
+    eng = _Engine(dag, pool, cost, arrival)
+    run = make_policy_run(policy, eng, **kw)
+    run.on_admit(dag)
+    run.run()
+    return eng.schedule_obj(policy)
+
+
 def schedule_rr(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                 arrival: Optional[Mapping[str, float]] = None) -> Schedule:
-    eng = _Engine(dag, pool, cost, arrival)
-    rr = itertools.cycle(range(eng.n_pes))
-    ready = eng._ready
-    while ready:
-        tid = next(iter(ready))  # FIFO
-        eng._place_i(tid, next(rr))
-    return eng.schedule_obj("rr")
+    return _run_batch("rr", dag, pool, cost, arrival)
 
 
 def schedule_eft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                  arrival: Optional[Mapping[str, float]] = None) -> Schedule:
-    eng = _Engine(dag, pool, cost, arrival)
-    rank = _rank(dag, pool, cost)
-    names = eng._di.names
-    neg_rank = [-rank[nm] for nm in names]
-    fin = eng._finish_fn()
-
-    def key(tid: int, pj: int) -> Tuple:
-        return (fin(tid, pj), neg_rank[tid], names[tid], pj)
-
-    # tasks with equal exec rows and equal rank are key-identical up to name
-    rows = eng._exec_row_ids
-    sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
-             if rows is not None else None)
-    off_base = eng._off_base
-
-    def offfn(tid: int, pj: int, base: float) -> Tuple:
-        # saturated key = (base + off_base, neg_rank, name, pj)
-        return (off_base(tid, pj), neg_rank[tid])
-
-    sel = _ClassedBest(eng, key, sigfn, offfn)
-    while not eng.done():
-        sel.push_ready()
-        tid, pj = sel.pop_best()
-        eng._place_i(tid, pj)
-    return eng.schedule_obj("eft")
+    return _run_batch("eft", dag, pool, cost, arrival)
 
 
 def schedule_etf(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
@@ -1153,92 +2023,19 @@ def schedule_etf(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     exactly like the candidate classes of the (task, PE) policies. Only the
     O(|PE|) best-PE scan runs per placement.
     """
-    eng = _Engine(dag, pool, cost, arrival)
-    names = eng._di.names
-    pe_names = [p.name for p in eng._pi.pes]
-    n_pes = eng.n_pes
-    fin = eng._finish_fn()
-    ready_heap: List[float] = []   # distinct ready_at values
-    buckets: Dict[float, List[Tuple[str, int]]] = {}  # value -> name-FIFO
-    while not eng.done():
-        for tid in eng.take_newly_ready():
-            r = eng._ready_at_i(tid)
-            b = buckets.get(r)
-            if b is None:
-                buckets[r] = [(names[tid], tid)]
-                heapq.heappush(ready_heap, r)
-            else:
-                heapq.heappush(b, (names[tid], tid))
-        r = ready_heap[0]
-        b = buckets[r]
-        _, tid = heapq.heappop(b)
-        if not b:
-            heapq.heappop(ready_heap)
-            del buckets[r]
-        best_pj = min(range(n_pes),
-                      key=lambda pj: (fin(tid, pj), pe_names[pj]))
-        eng._place_i(tid, best_pj)
-    return eng.schedule_obj("etf")
+    return _run_batch("etf", dag, pool, cost, arrival)
 
 
 def schedule_etf_hwang(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                        arrival: Optional[Mapping[str, float]] = None) -> Schedule:
     """Classic ETF (Hwang et al.): among (ready task, PE) pairs pick the one
     with the earliest achievable *start* time (beyond-paper variant)."""
-    eng = _Engine(dag, pool, cost, arrival)
-    rank = _rank(dag, pool, cost)
-    names = eng._di.names
-    neg_rank = [-rank[nm] for nm in names]
-    start_fin = eng._start_finish_fn()
-
-    def key(tid: int, pj: int) -> Tuple:
-        # earliest start; break ties toward shorter finish, then rank
-        hold, finish = start_fin(tid, pj)
-        return (hold, finish, neg_rank[tid], names[tid], pj)
-
-    rows = eng._exec_row_ids
-    sigfn = ((lambda tid: (rows[tid], neg_rank[tid]))
-             if rows is not None else None)
-    off_base = eng._off_base
-
-    def offfn(tid: int, pj: int, base: float) -> Tuple:
-        # saturated key = (pe_free, base + off_base, neg_rank, name, pj)
-        return (0.0, off_base(tid, pj), neg_rank[tid])
-
-    sel = _ClassedBest(eng, key, sigfn, offfn, shift=(1, 2))
-    while not eng.done():
-        sel.push_ready()
-        tid, pj = sel.pop_best()
-        eng._place_i(tid, pj)
-    return eng.schedule_obj("etf_hwang")
+    return _run_batch("etf_hwang", dag, pool, cost, arrival)
 
 
 def schedule_minmin(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                     arrival: Optional[Mapping[str, float]] = None) -> Schedule:
-    eng = _Engine(dag, pool, cost, arrival)
-    names = eng._di.names
-    fin = eng._finish_fn()
-
-    # Min-Min picks the task whose *best-PE* finish is smallest; the global
-    # (finish, name, pe) minimum over all pairs is exactly that task on
-    # exactly that PE, so one lazy heap covers both minimisations.
-    def key(tid: int, pj: int) -> Tuple:
-        return (fin(tid, pj), names[tid], pj)
-
-    rows = eng._exec_row_ids
-    sigfn = (lambda tid: rows[tid]) if rows is not None else None
-    off_base = eng._off_base
-
-    def offfn(tid: int, pj: int, base: float) -> Tuple:
-        # saturated key = (base + off_base, name, pj)
-        return (off_base(tid, pj),)
-
-    sel = _ClassedBest(eng, key, sigfn, offfn)
-    while not eng.done():
-        sel.push_ready()
-        tid, pj = sel.pop_best()
-        eng._place_i(tid, pj)
-    return eng.schedule_obj("minmin")
+    return _run_batch("minmin", dag, pool, cost, arrival)
 
 
 def schedule_heft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
@@ -1252,70 +2049,7 @@ def schedule_heft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     beyond their max finish, so the gap scan starts at the first slot
     beginning after ``ready_t`` (bisect) instead of rescanning the prefix.
     """
-    eng = _Engine(dag, pool, cost, arrival)
-    rank = _rank(dag, pool, cost)
-    order = sorted(dag.tasks, key=lambda t: (-rank[t.name], t.name))
-    id_of = eng._di.id_of
-    n_pes = eng.n_pes
-    pe_free = eng._pe_free
-    neg_inf = float("-inf")
-    starts: List[List[float]] = [[] for _ in range(n_pes)]
-    fins: List[List[float]] = [[] for _ in range(n_pes)]
-    slots: List[List[Tuple[float, float]]] = [[] for _ in range(n_pes)]
-    prefmax: List[List[float]] = [[neg_inf] for _ in range(n_pes)]
-
-    def insertion_start(pj: int, ready_t: float, dur: float) -> float:
-        """Earliest gap ≥ dur after ready_t on pe (or after last job)."""
-        st = starts[pj]
-        fn = fins[pj]
-        if dur > 0 and st:
-            i0 = bisect.bisect_right(st, ready_t)
-            pm = prefmax[pj][i0]
-            t = ready_t if ready_t >= pm else pm
-        else:
-            i0 = 0
-            t = ready_t
-        for k in range(i0, len(st)):
-            if t + dur <= st[k]:
-                return t
-            f = fn[k]
-            if f > t:
-                t = f
-        return t
-
-    for task in order:
-        # HEFT processes in rank order; preds are guaranteed placed because
-        # rank(pred) > rank(task) along edges.
-        tid = id_of[task.name]
-        ready_t = eng._ready_at_i(tid)
-        best = None
-        for pj in range(n_pes):
-            # estimated duration including (unbooked) transfer stall
-            pf = pe_free[pj]
-            s_probe = ready_t if ready_t >= pf else pf
-            dur = (eng._exec_start_i(tid, pj, s_probe) - s_probe
-                   + eng._exec(tid, pj))
-            s = insertion_start(pj, ready_t, dur)
-            key = (s + dur, task.name)
-            if best is None or key < best[:2]:
-                best = (*key, pj, s)
-        pj, s = best[2], best[3]
-        a = eng._place_i(tid, pj, start=s)
-        # insert the realised slot, keeping (start, finish) order and the
-        # finish prefix-max in sync
-        slot = (a.start, a.finish)
-        pos = bisect.bisect(slots[pj], slot)
-        slots[pj].insert(pos, slot)
-        starts[pj].insert(pos, a.start)
-        fins[pj].insert(pos, a.finish)
-        pm = prefmax[pj]
-        pm.insert(pos + 1, 0.0)
-        fn = fins[pj]
-        for k in range(pos, len(fn)):
-            prev = pm[k]
-            f = fn[k]
-            pm[k + 1] = f if f > prev else prev
-    return eng.schedule_obj("heft")
+    return _run_batch("heft", dag, pool, cost, arrival)
 
 
 def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
@@ -1328,59 +2062,13 @@ def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     on the task's critical-path slack (see repro.core.vos.linear_decay).
     For the incremental engine's lazy heap to stay exact, ``value_fn`` must
     be non-increasing in finish time — true of any deadline/decay curve
-    (value never *grows* by finishing later).
+    (value never *grows* by finishing later). The default value curve
+    depends on finish time only — custom curves may inspect the task, which
+    makes tasks non-interchangeable, so class grouping (and online
+    admission deferral) is only enabled for the default.
     """
-    from repro.core import vos as vos_mod
-    eng = _Engine(dag, pool, cost, arrival)
-    rank = _rank(dag, pool, cost)
-    # the default value curve depends on finish time only — custom curves
-    # may inspect the task, which makes tasks non-interchangeable, so class
-    # grouping is only enabled for the default
-    task_independent_value = value_fn is None
-    hard = None
-    if value_fn is None:
-        horizon = max(rank.values()) * 2.0 + 1e-9
-        hard = horizon * 4
-        value_fn = lambda t, f: vos_mod.linear_decay(f, soft=horizon / 2, hard=hard)
-    di = eng._di
-    names = di.names
-    tasks = di.tasks
-    fin = eng._finish_fn()
-    energy = eng._energy
-
-    def key(tid: int, pj: int) -> Tuple:
-        f = fin(tid, pj)
-        vos_rate = value_fn(tasks[tid], f) - energy_weight * energy(tid, pj)
-        return (-vos_rate, f, names[tid], pj)
-
-    rows = eng._exec_row_ids
-    erows = eng._energy_row_ids
-    sigfn = ((lambda tid: (rows[tid], erows[tid]))
-             if task_independent_value and rows is not None
-             and erows is not None else None)
-    # -value_fn(finish) is nonlinear in finish, so saturated keys are not
-    # base + constant in general — but past the hard deadline the default
-    # curve is pinned at exactly 0 and the key degenerates to
-    # (energy_weight·energy, finish, name, pj): comp0 static, comp1 offset.
-    # finish only grows, so 'minimum finish ≥ hard' holds forever. At
-    # instance counts where scaling matters the bulk of the run is past
-    # the deadline; earlier candidates stay on the absolute lazy path.
-    offfn = None
-    if task_independent_value:
-        off_base = eng._off_base
-
-        def offfn(tid: int, pj: int, base: float) -> Optional[Tuple]:
-            s = off_base(tid, pj)
-            if base + s < hard:
-                return None
-            return (energy_weight * energy(tid, pj), s)
-
-    sel = _ClassedBest(eng, key, sigfn, offfn, shift=(0, 2))
-    while not eng.done():
-        sel.push_ready()
-        tid, pj = sel.pop_best()
-        eng._place_i(tid, pj)
-    return eng.schedule_obj("vos")
+    return _run_batch("vos", dag, pool, cost, arrival,
+                      value_fn=value_fn, energy_weight=energy_weight)
 
 
 SCHEDULERS: Dict[str, Callable[..., Schedule]] = {

@@ -69,6 +69,7 @@ def merge_instances(workload: PipelineDAG, n_instances: int,
 def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
                   policy: str = "eft", n_instances: int = 100,
                   period: float = 0.0, label: str = "",
+                  online: bool = False,
                   _premerged: Optional[Tuple[PipelineDAG, Dict[str, float]]] = None
                   ) -> RunResult:
     """Submit ``n_instances`` copies of ``workload`` (all at once, or one
@@ -78,7 +79,17 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
     and the incremental engine in :mod:`repro.core.schedulers`, so 1k-instance
     sweeps are tractable; ``wall_seconds`` records the scheduler cost.
     ``_premerged`` (from :func:`merge_instances`) skips the merge when the
-    caller sweeps several policies over one problem."""
+    caller sweeps several policies over one problem.
+
+    ``online=True`` routes through the streaming driver
+    (:func:`repro.core.online.run_online`): instances are admitted into a
+    live engine as they arrive instead of merged up front — byte-identical
+    schedules, per-event cost independent of ``n_instances``, and the extra
+    telemetry of :class:`repro.core.online.OnlineRunResult`."""
+    if online:
+        from repro.core.online import run_online
+        return run_online(workload, pool, cost, policy=policy,
+                          n_instances=n_instances, period=period, label=label)
     t0 = time.perf_counter()
     merged, arrival = _premerged or merge_instances(workload, n_instances,
                                                     period)

@@ -129,21 +129,33 @@ class VDCManager:
     def compose(self, name: str, axis_shape: Mapping[str, int],
                 slo: Optional[SLO] = None,
                 predicted: Optional[RooflineTerms] = None) -> VirtualDataCenter:
-        """Carve a mesh of ``axis_shape`` (e.g. {"data": 4, "model": 2})."""
+        """Carve a mesh of ``axis_shape`` (e.g. {"data": 4, "model": 2}).
+
+        Atomic: the pool is mutated only after every construction step
+        (reserve check, device reshape, mesh build) has succeeded, so a
+        failed compose leaves ``free_chips`` and the VDC table untouched.
+
+        The availability reserve is ``ceil(total_chips · min_availability)``
+        chips that must remain *free after* this allocation — the SLO's
+        "fraction of spare capacity kept". It is enforced against the free
+        count directly (``free - n >= reserve``); chips already allocated to
+        other VDCs never count toward the reserve.
+        """
         if name in self._vdcs:
             raise AllocationError(f"VDC {name!r} already exists")
         n = int(np.prod(list(axis_shape.values())))
         avail = len(self._free)
         slo = slo or SLO()
         reserve = int(math.ceil(self.total_chips * slo.min_availability))
-        if n > avail - max(0, reserve - (self.total_chips - avail)):
+        if avail - n < reserve:
             raise AllocationError(
-                f"need {n} chips, only {avail} free "
-                f"(availability reserve {reserve})")
-        take, self._free = self._free[:n], self._free[n:]
+                f"need {n} chips, only {avail} free of {self.total_chips} "
+                f"(availability reserve {reserve} must stay free)")
+        take = self._free[:n]
         dev_arr = np.array(take, dtype=object).reshape(tuple(axis_shape.values()))
         mesh = jax.sharding.Mesh(dev_arr, tuple(axis_shape.keys()))
         vdc = VirtualDataCenter(name, mesh, tuple(take), slo, predicted)
+        self._free = self._free[n:]
         self._vdcs[name] = vdc
         return vdc
 
@@ -165,10 +177,23 @@ class VDCManager:
                ) -> VirtualDataCenter:
         """Re-mesh a VDC to a new shape (elastic scale up/down).
 
-        Releases then re-composes; the caller reshards live state via
-        repro.core.elastic.reshard (checkpoint-free when both meshes are
-        up, checkpoint-based across failures).
+        Releases then re-composes, so a resize may reuse the VDC's own
+        chips for the new shape. Atomic: if the re-composition fails for
+        any reason, the original VDC (and its chip allocation and mesh) is
+        restored before the error propagates — a failed grow must never
+        destroy the running VDC.
+
+        The caller reshards live state via repro.core.elastic.reshard
+        (checkpoint-free when both meshes are up, checkpoint-based across
+        failures).
         """
-        slo = self._vdcs[name].slo
-        self.release(name)
-        return self.compose(name, axis_shape, slo=slo)
+        old = self._vdcs[name]
+        self.release(name)  # appends old.devices at the tail of the free list
+        try:
+            return self.compose(name, axis_shape, slo=old.slo)
+        except Exception:
+            # compose is atomic, so the free list still ends with exactly
+            # old.devices — pop them back off and restore the original VDC
+            del self._free[len(self._free) - len(old.devices):]
+            self._vdcs[name] = old
+            raise

@@ -46,3 +46,27 @@ def test_execution_feeds_learned_cost_model(setup):
     Executor(pool, learn_into=learned).execute(wl, sched,
                                                inputs={"ingest": raw})
     assert learned._obs  # observations recorded per (family, kind)
+
+
+def test_zero_duration_predecessor_executes_before_successor():
+    """Regression: execute() ordered by (start, task_name); a zero-cost
+    predecessor sharing its successor's start time but sorting *after* it
+    by name crashed on the missing predecessor output. Ties now break by
+    topological order."""
+    from repro.core.dag import PipelineDAG, Task
+    g = PipelineDAG("zerocost")
+    # work=0 → exec_time 0 → 'z_head' finishes the instant it starts, and
+    # its successor 'a_tail' starts at the same timestamp; "a_tail" < "z_head"
+    # by name, so the old sort ran the successor first
+    g.add_task(Task("z_head", "ingest", work=0.0, out_bytes=0.0,
+                    backends={"host": lambda: np.float32(3.0)}))
+    g.add_task(Task("a_tail", "export", work=1.0,
+                    backends={"host": lambda x: x * 2}))
+    g.add_edge("z_head", "a_tail")
+    pool = paper_pool(n_arm=1, n_volta=0, n_xeon=0, n_v100=0, n_alveo=0)
+    sched = schedule(g, pool, CostModel(), policy="eft")
+    a_by = {a.task: a for a in sched.assignments}
+    assert a_by["z_head"].start == a_by["a_tail"].start  # the tie is real
+    rep = Executor(pool).execute(g, sched)
+    assert [r.task for r in rep.runs] == ["z_head", "a_tail"]
+    assert float(rep.outputs["a_tail"]) == 6.0

@@ -1,0 +1,318 @@
+"""Online arrival driver + elastic re-plan tests (PR 3).
+
+Three pillars:
+
+  * **Batch equivalence** — for any ``period``, the streaming driver
+    (repro.core.online) must produce *byte-identical* schedules to the
+    batch ``run_instances(period)`` path, for every policy: the admission
+    gate defers instances exactly while no task of theirs could win (or
+    tie) the next placement. Pinned three ways: against the checked-in
+    golden digests, parametrised over policies × periods, and a hypothesis
+    differential over random templates/periods/policies.
+  * **Elastic re-plan differential** — shrinking or growing the pool
+    mid-run via ``OnlineDriver.repool`` must complete with exactly the
+    placements a restart-from-history run on the surviving pool makes
+    (``restart_from_history``: fresh engine + admissions + replayed
+    assignment record). This pins the live re-key path (horizon remaps,
+    plan/link drops, selector rebuilds, pool-dependent re-ranking) against
+    the from-scratch reconstruction.
+  * **Driver runtime behaviour** — instances retire when their last task
+    is placed (completions recorded, plan-cache rows freed), the live set
+    stays bounded for spaced arrivals, and heterogeneous submissions are
+    accepted.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel, LearnedCostModel
+from repro.core.dag import PipelineDAG, Task
+from repro.core.online import OnlineDriver, restart_from_history, run_online
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES, assignment_digest
+from repro.core.simulator import run_instances
+from repro.pipeline.workloads import ds_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
+
+
+def _digest(sched):
+    return assignment_digest(sched.assignments)
+
+
+def _assignment_tuples(sched):
+    return [(a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+            for a in sched.assignments]
+
+
+# ---------------------------------------------------------------------------
+# Batch equivalence
+# ---------------------------------------------------------------------------
+
+def test_online_matches_golden_arrival_pin():
+    """The streaming driver reproduces the *seed-engine* golden digest for
+    the arrival-period run — three engine generations, one schedule."""
+    with open(GOLDEN) as f:
+        g = json.load(f)["eft_n10_period7.5"]
+    r = run_online(ds_workload(), paper_pool(), CostModel(),
+                   policy="eft", n_instances=10, period=7.5)
+    assert r.makespan == g["makespan"]
+    assert r.mean_utilization == g["mean_utilization"]
+    assert r.total_energy == g["total_energy"]
+    assert _digest(r.schedule) == g["digest"]
+
+
+@pytest.mark.parametrize("period", [0.0, 3.0, 7.5])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_online_matches_batch_all_policies(policy, period):
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    batch = run_instances(wl, pool, cost, policy=policy, n_instances=8,
+                          period=period)
+    online = run_instances(wl, pool, cost, policy=policy, n_instances=8,
+                           period=period, online=True)
+    assert (_assignment_tuples(online.schedule)
+            == _assignment_tuples(batch.schedule))
+    assert online.makespan == batch.makespan
+    assert online.total_energy == batch.total_energy
+    assert online.n_events == len(batch.schedule.assignments)
+
+
+def _random_template(seed: int, n: int = 9) -> PipelineDAG:
+    rng = np.random.default_rng(seed)
+    g = PipelineDAG(f"tpl{seed}")
+    ops = ["ingest", "sql_transform", "kmeans", "summarize", "window_agg",
+           "linreg", "anomaly", "export"]
+    for i in range(n):
+        g.add_task(Task(f"t{i}", str(rng.choice(ops)),
+                        work=float(rng.uniform(0.5, 12)),
+                        out_bytes=float(rng.uniform(0, 3e6)),
+                        in_bytes=float(rng.uniform(0, 6e6)) if i == 0 else 0))
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, 2), replace=False):
+            g.add_edge(f"t{j}", f"t{i}")
+    return g
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_instances=st.integers(min_value=1, max_value=10),
+       period=st.floats(min_value=0.0, max_value=12.0),
+       policy=st.sampled_from(POLICIES))
+def test_online_batch_differential_hypothesis(seed, n_instances, period,
+                                              policy):
+    """Random template × random arrival spacing × every policy: streaming
+    driver == batch path, assignment for assignment."""
+    wl = _random_template(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    batch = run_instances(wl, pool, cost, policy=policy,
+                          n_instances=n_instances, period=period)
+    online = run_instances(wl, pool, cost, policy=policy,
+                           n_instances=n_instances, period=period,
+                           online=True)
+    assert (_assignment_tuples(online.schedule)
+            == _assignment_tuples(batch.schedule))
+
+
+def test_online_learned_cost_model_scalar_path():
+    """Subclassed cost models disable the vectorized tables (and class
+    grouping); the online driver must still match the batch path."""
+    def trained():
+        m = LearnedCostModel(min_samples=2)
+        t = Task("k", "kmeans", work=10.0)
+        for pe in paper_pool().pes:
+            for _ in range(3):
+                m.observe(t, pe, seconds=0.5)
+        return m
+
+    wl = ds_workload()
+    pool = paper_pool()
+    batch = run_instances(wl, pool, trained(), policy="eft", n_instances=6,
+                          period=5.0)
+    online = run_instances(wl, pool, trained(), policy="eft", n_instances=6,
+                           period=5.0, online=True)
+    assert (_assignment_tuples(online.schedule)
+            == _assignment_tuples(batch.schedule))
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-plan vs restart-from-history
+# ---------------------------------------------------------------------------
+
+def _run_split(policy, drop, k, n_instances=12, period=3.0, grow_to=None):
+    """Drive ``k`` events, change the pool, finish via (A) live repool and
+    (B) restart-from-history; return both assignment-tuple lists."""
+    wl = ds_workload()
+    pool = paper_pool() if grow_to is None else paper_pool().without(drop)
+    cost = CostModel()
+    drv = OnlineDriver(pool, cost, policy=policy)
+    for i in range(n_instances):
+        drv.submit(wl.instance(i), arrival_t=i * period)
+    for _ in range(k):
+        assert drv.step() is not None
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = [(d, t) for (t, _, d) in sorted(drv._pending)]
+    loc_of = {p.name: p.location for p in pool.pes}
+    new_pool = grow_to if grow_to is not None else pool.without(drop)
+    drv.repool(new_pool)
+    sched_a = drv.run()
+    drv_b = restart_from_history(new_pool, cost, policy, admitted, history,
+                                 pending, loc_of)
+    sched_b = drv_b.run()
+    return _assignment_tuples(sched_a), _assignment_tuples(sched_b)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_repool_shrink_matches_restart(policy):
+    """Mid-run shrink (PEs removed, some with placed history) completes
+    with the placements a restart-from-scratch on the surviving pool
+    makes."""
+    a, b = _run_split(policy, drop=["xeon2", "arm1"], k=50)
+    assert a == b
+    assert len(a) == 12 * 16  # every task placed exactly once
+
+
+@pytest.mark.parametrize("policy", ["eft", "etf", "minmin", "vos"])
+def test_repool_whole_location_removed(policy):
+    """Removing every frontend PE strands placed history at a location with
+    no PEs — transfer plans and link bookings must survive by location."""
+    a, b = _run_split(policy, drop=["arm0", "arm1", "arm2", "volta0"], k=64)
+    assert a == b
+
+
+@pytest.mark.parametrize("policy", ["eft", "etf_hwang", "heft", "rr"])
+def test_repool_grow_matches_restart(policy):
+    """Mid-run grow (a PE joins) re-plans onto the larger pool identically
+    to a restart on it."""
+    a, b = _run_split(policy, drop=["xeon2"], k=40, n_instances=10,
+                      grow_to=paper_pool())
+    assert a == b
+
+
+def test_repool_uses_new_pe():
+    """A grow is not cosmetic: remaining work actually lands on the PE that
+    joined (it starts free while incumbents carry horizons)."""
+    wl = ds_workload()
+    small = paper_pool().without(["xeon2"])
+    drv = OnlineDriver(small, CostModel(), policy="eft")
+    for i in range(8):
+        drv.submit(wl.instance(i), arrival_t=0.0)
+    for _ in range(40):
+        drv.step()
+    drv.repool(paper_pool())
+    sched = drv.run()
+    assert any(a.pe == "xeon2" for a in sched.assignments)
+
+
+def test_health_monitor_drives_repool():
+    """Elastic wiring end-to-end: a dead PE reported by the HealthMonitor
+    prunes the pool, the driver re-plans, and no further task lands on the
+    dead PE."""
+    from repro.core import elastic as el
+    wl = ds_workload()
+    pool = paper_pool()
+    drv = OnlineDriver(pool, CostModel(), policy="eft")
+    for i in range(6):
+        drv.submit(wl.instance(i), arrival_t=0.0)
+    for _ in range(30):
+        drv.step()
+    mon = el.HealthMonitor([p.name for p in pool.pes], heartbeat_timeout=5.0)
+    for p in pool.pes:
+        mon.heartbeat(p.name, now=8.0)
+    mon.heartbeat("xeon1", now=-100.0)  # silent worker
+    for w in mon.dead(now=10.0):
+        mon.mark_dead(w)
+    assert mon.healthy() == [p.name for p in pool.pes if p.name != "xeon1"]
+    n_before = len(drv.eng.assignments)
+    drv.repool(el.prune_pool(pool, mon))
+    sched = drv.run()
+    assert all(a.pe != "xeon1" for a in sched.assignments[n_before:])
+    assert len(sched.assignments) == 6 * 16
+
+
+# ---------------------------------------------------------------------------
+# Driver runtime behaviour
+# ---------------------------------------------------------------------------
+
+def test_driver_retires_instances_and_bounds_live_set():
+    wl = ds_workload()
+    # period far above the per-instance service time: the live set must
+    # stay tiny no matter how many instances stream through
+    r = run_online(wl, paper_pool(), CostModel(), policy="eft",
+                   n_instances=30, period=60.0)
+    assert [name for name, _ in r.completions] == \
+        [f"{wl.name}#{i}" for i in range(30)]
+    assert r.max_live <= 3
+    assert r.n_events == 30 * 16
+
+
+def test_driver_frees_plan_cache_on_retire():
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(4):
+        drv.submit(wl.instance(i), arrival_t=i * 500.0)
+    drv.run()
+    first = drv.instances[0]
+    assert first.completed
+    for row in drv.eng._plans.values():
+        assert all(row[t] is None for t in range(first.first_tid,
+                                                 first.first_tid
+                                                 + first.n_tasks))
+
+
+def test_driver_heterogeneous_submissions():
+    """Different DAGs may stream through one driver; every task is placed
+    once and never before its instance's arrival."""
+    pool = paper_pool()
+    drv = OnlineDriver(pool, CostModel(), policy="eft")
+    dags = [_random_template(s).instance(s) for s in (1, 2, 3)]
+    for i, d in enumerate(dags):
+        drv.submit(d, arrival_t=i * 4.0)
+    sched = drv.run()
+    assert len(sched.assignments) == sum(len(d) for d in dags)
+    by_task = {a.task: a for a in sched.assignments}
+    for i, d in enumerate(dags):
+        for t in d.tasks:
+            assert by_task[t.name].start >= i * 4.0
+    assert sorted(n for n, _ in drv.completions) == sorted(d.name for d in dags)
+
+
+def test_driver_rejects_duplicate_admission():
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    drv.submit(wl.instance(0))
+    drv.submit(wl.instance(0))
+    with pytest.raises(ValueError, match="duplicate task"):
+        drv.run()
+
+
+def test_stepwise_interleaves_with_batch_result():
+    """Manual step() loop == run(), and the result object carries the
+    batch-compatible aggregate fields."""
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    drv = OnlineDriver(pool, cost, policy="etf")
+    for i in range(5):
+        drv.submit(wl.instance(i), arrival_t=i * 7.5)
+    placed = []
+    while True:
+        a = drv.step()
+        if a is None and not drv.pending:
+            break
+        placed.append(a)
+    batch = run_instances(wl, pool, cost, policy="etf", n_instances=5,
+                          period=7.5)
+    assert ([(a.task, a.pe, a.start, a.finish) for a in placed]
+            == [(a.task, a.pe, a.start, a.finish)
+                for a in batch.schedule.assignments])
+    res = drv.result()
+    assert res.makespan == batch.makespan
+    assert res.policy == "etf"

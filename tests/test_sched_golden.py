@@ -14,7 +14,6 @@ intentionally changed. Three layers of protection:
   * determinism: two runs of the same problem give identical schedules.
 """
 
-import hashlib
 import json
 import os
 
@@ -24,7 +23,7 @@ import pytest
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG, Task
 from repro.core.resources import paper_pool
-from repro.core.schedulers import POLICIES, schedule
+from repro.core.schedulers import POLICIES, assignment_digest, schedule
 from repro.core.schedulers_reference import schedule_reference
 from repro.core.simulator import run_instances
 from repro.pipeline.workloads import ds_workload
@@ -33,11 +32,7 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
 
 
 def _digest(sched):
-    h = hashlib.sha256()
-    for a in sched.assignments:
-        h.update(repr((a.task, a.op, a.pe, a.start, a.finish,
-                       a.comm_wait, a.energy)).encode())
-    return h.hexdigest()
+    return assignment_digest(sched.assignments)
 
 
 def _assignment_tuples(sched):

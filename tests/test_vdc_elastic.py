@@ -76,6 +76,80 @@ def test_health_monitor_straggler_and_death():
     assert mon.dead(now=100.0) == ["a", "b", "c"]     # all silent now
 
 
+def test_health_monitor_repeated_polls_do_not_double_strike():
+    """Regression: stragglers() used to mutate strike counts on every
+    *call*, so polling twice between observations fired before ``patience``
+    real observations. Strikes are accounted per observation, in
+    observe()."""
+    mon = el.HealthMonitor(["a", "b", "c"], patience=3)
+    for w in "abc":
+        mon.observe(w, 3.0 if w == "c" else 1.0, now=0.0)
+    # one observation, many polls: far fewer than patience observations
+    for _ in range(10):
+        assert mon.stragglers() == []
+    # two more slow observations reach patience=3 — exactly then it fires,
+    # no matter how often the monitor was polled in between
+    mon.observe("c", 3.0, now=1.0)
+    assert mon.stragglers() == []
+    assert mon.stragglers() == []
+    mon.observe("c", 3.0, now=2.0)
+    assert mon.stragglers() == ["c"]
+    # healthy observations decay the EWMA below threshold → streak resets
+    for k in range(3):
+        mon.observe("c", 0.1, now=3.0 + k)
+    assert mon.stragglers() == []
+
+
+def test_health_monitor_batched_observations_still_flag():
+    """Dual regression (of the double-count fix): observations arriving in
+    batches between polls must each count toward ``patience`` — a worker
+    slow for >= patience consecutive observations is flagged on the next
+    poll no matter how sparsely the monitor is polled."""
+    mon = el.HealthMonitor(["a", "b", "c"], patience=3)
+    for step in range(5):
+        for w in "abc":
+            mon.observe(w, 3.0 if w == "c" else 1.0, now=float(step))
+    # no poll happened during the 5 slow observations
+    assert mon.stragglers() == ["c"]
+
+
+def test_vdc_resize_rolls_back_on_failure():
+    """Regression: resize released the VDC before composing the new shape,
+    so a failed grow destroyed the original VDC and its mesh. Resize must
+    be atomic — on failure the original allocation is fully restored."""
+    mgr = VDCManager(devices=list(jax.devices()) * 8)
+    a = mgr.compose("a", {"data": 4, "model": 1})
+    mgr.compose("b", {"data": 3, "model": 1})
+    assert mgr.free_chips == 1
+    with pytest.raises(AllocationError):
+        mgr.resize("a", {"data": 6, "model": 1})  # needs 6, only 4+1 free
+    assert mgr.vdc("a") is a                       # original VDC restored
+    assert a.n_chips == 4 and mgr.free_chips == 1  # allocation unchanged
+    with a:                                        # mesh still usable
+        pass
+    # a feasible resize (reusing its own chips) still works afterwards
+    a2 = mgr.resize("a", {"data": 5, "model": 1})
+    assert a2.n_chips == 5 and mgr.free_chips == 0
+
+
+def test_vdc_availability_reserve_enforced_after_allocation():
+    """Regression: the reserve check credited already-allocated chips
+    against the reserve, shrinking it to zero as the pool filled. The
+    reserve is spare capacity that must stay *free after* every compose."""
+    mgr = VDCManager(devices=list(jax.devices()) * 10)
+    slo = SLO(min_availability=0.2)                # reserve = 2 of 10
+    with pytest.raises(AllocationError):
+        mgr.compose("too_big", {"data": 9}, slo=slo)
+    mgr.compose("a", {"data": 5}, slo=slo)         # 5 free >= 2 reserve
+    mgr.compose("b", {"data": 3}, slo=slo)         # boundary: 2 free == 2
+    assert mgr.free_chips == 2
+    with pytest.raises(AllocationError):
+        # old (buggy) accounting: reserve - (total - avail) = 2 - 8 < 0,
+        # so this allocation used to be admitted, leaving 1 < reserve free
+        mgr.compose("c", {"data": 1}, slo=slo)
+    assert mgr.free_chips == 2                     # failed compose is a no-op
+
+
 def test_reshard_on_current_devices():
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1, 1), ("data", "model"))
