@@ -44,6 +44,7 @@ def bench(sizes, policies, period: float, max_ratio: float):
     from repro.core.resources import paper_pool
     from repro.core.schedulers import assignment_digest as _digest, schedule
     from repro.core.simulator import merge_instances
+    from repro.core.vos import slo_mix
     from repro.pipeline.workloads import ds_workload
 
     wl = ds_workload()
@@ -52,13 +53,22 @@ def bench(sizes, policies, period: float, max_ratio: float):
     results: dict = {pol: {} for pol in policies}
     failures: list = []
     for n in sizes:
-        merged, arrival = merge_instances(wl, n, period)
+        merged, arrival, _ = merge_instances(wl, n, period)
         for pol in policies:
+            # "vos_hetero" = vos under the deterministic heterogeneous SLO
+            # mix (same mix as benchmarks/bench_sched.py) — exercises the
+            # per-instance floor admission gate at scale
+            kw = {}
+            real_pol = pol
+            if pol == "vos_hetero":
+                real_pol = "vos"
+                kw["curves"] = slo_mix(n, horizon=6.0 * n)
             t0 = time.perf_counter()
-            batch = schedule(merged, pool, cost, policy=pol, arrival=arrival)
+            batch = schedule(merged, pool, cost, policy=real_pol,
+                             arrival=arrival, **kw)
             batch_s = time.perf_counter() - t0
-            online = run_online(wl, pool, cost, policy=pol, n_instances=n,
-                                period=period)
+            online = run_online(wl, pool, cost, policy=real_pol,
+                                n_instances=n, period=period, **kw)
             online_s = online.wall_seconds
             if _digest(batch.assignments) != _digest(
                     online.schedule.assignments):
@@ -89,8 +99,9 @@ def bench(sizes, policies, period: float, max_ratio: float):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: n=24, nonzero period, eft+etf, no file "
-                         "write unless --out given explicitly")
+                    help="CI smoke: n=24, nonzero period, "
+                         "eft+etf+vos+vos_hetero, no file write unless "
+                         "--out given explicitly")
     ap.add_argument("--sizes", default="100,1000")
     ap.add_argument("--period", type=float, default=5.0,
                     help="arrival period in seconds (0 = all at once)")
@@ -103,7 +114,8 @@ def main(argv=None) -> int:
                          "of the batch engine at the same n")
     args = ap.parse_args(argv)
     sizes = [24] if args.smoke else [int(s) for s in args.sizes.split(",")]
-    policies = args.policies.split(",")
+    policies = (["eft", "etf", "vos", "vos_hetero"] if args.smoke
+                else args.policies.split(","))
     t0 = time.perf_counter()
     results, failures = bench(sizes, policies, args.period, args.max_ratio)
     if args.out:

@@ -6,7 +6,12 @@
         [--baseline BENCH_sched.json --max-regression 3.0]
 
 Times each policy on ``ds_workload()`` merged ×n on ``paper_pool()`` (the
-paper's Fig. 6/7 setting) and writes ``BENCH_sched.json``:
+paper's Fig. 6/7 setting) and writes ``BENCH_sched.json``. The pseudo-policy
+``vos_hetero`` runs the VoS policy under the deterministic heterogeneous
+per-instance SLO mix of :func:`repro.core.vos.slo_mix` (step / linear /
+exponential curves, deadlines spread around the sweep's makespan scale) and
+is gated to stay within ``HETERO_MAX_RATIO`` of the flat-curve vos run —
+the piecewise-affine scaled-offset fast path at work. Output shape:
 
     {"meta": {...}, "results": {"<policy>": {"<n>": {"seconds": ...,
      "makespan": ..., "mean_utilization": ...}}}}
@@ -51,11 +56,19 @@ def _digest(sched) -> str:
     return assignment_digest(sched.assignments)
 
 
+#: the vos_hetero pseudo-policy must stay within this factor of the
+#: flat-curve vos run at the same n — the piecewise-affine offset form
+#: keeps heterogeneous SLO mixes on the fast path, and this gate keeps it
+#: that way
+HETERO_MAX_RATIO = 2.0
+
+
 def bench(sizes, policies, repeat: int = 1, check_golden: bool = False):
     from repro.core.cost_model import CostModel
     from repro.core.resources import paper_pool
     from repro.core.schedulers import schedule
     from repro.core.simulator import merge_instances
+    from repro.core.vos import slo_mix
     from repro.pipeline.workloads import ds_workload
 
     golden = {}
@@ -76,13 +89,22 @@ def bench(sizes, policies, repeat: int = 1, check_golden: bool = False):
     merge_seconds: dict = {}
     for n in sizes:
         t0 = time.perf_counter()
-        merged, arrival = merge_instances(wl, n)
+        merged, arrival, _ = merge_instances(wl, n)
         merge_seconds[str(n)] = round(time.perf_counter() - t0, 4)
         for pol in policies:
+            # "vos_hetero" = the vos policy under the deterministic
+            # heterogeneous per-instance SLO mix of repro.core.vos.slo_mix
+            # (deadlines spread around the sweep's makespan scale)
+            kw = {}
+            real_pol = pol
+            if pol == "vos_hetero":
+                real_pol = "vos"
+                kw["curves"] = slo_mix(n, horizon=6.0 * n)
             best = None
             for _ in range(repeat):
                 t0 = time.perf_counter()
-                s = schedule(merged, pool, cost, policy=pol, arrival=arrival)
+                s = schedule(merged, pool, cost, policy=real_pol,
+                             arrival=arrival, **kw)
                 dt = time.perf_counter() - t0
                 if best is None or dt < best[0]:
                     best = (dt, s)
@@ -103,6 +125,15 @@ def bench(sizes, policies, repeat: int = 1, check_golden: bool = False):
                                     f"tests/golden_sched.json ({gkey})")
             print(f"sched,{pol}_n{n}_wall,{dt:.3f},s  (makespan "
                   f"{s.makespan:.1f}s){note}")
+        het = results.get("vos_hetero", {}).get(str(n))
+        flat = results.get("vos", {}).get(str(n))
+        if het and flat and flat["seconds"] >= 0.05 \
+                and het["seconds"] > HETERO_MAX_RATIO * flat["seconds"]:
+            failures.append(
+                f"vos_hetero n={n}: {het['seconds']:.3f}s > "
+                f"{HETERO_MAX_RATIO:g}x flat-curve vos "
+                f"{flat['seconds']:.3f}s (decay region fell off the "
+                f"offset fast path?)")
     return results, merge_seconds, failures
 
 
@@ -132,7 +163,8 @@ def main(argv=None) -> int:
                     help="small sizes for CI smoke (n=20,100)")
     ap.add_argument("--sizes", default="100,300,1000,3000")
     ap.add_argument("--policies", default=",".join(
-        ("rr", "etf", "etf_hwang", "eft", "heft", "minmin", "vos")))
+        ("rr", "etf", "etf_hwang", "eft", "heft", "minmin", "vos",
+         "vos_hetero")))
     ap.add_argument("--out", default="BENCH_sched.json")
     ap.add_argument("--check-golden", action="store_true",
                     help="fail if any schedule diverges from the golden "

@@ -50,6 +50,24 @@ def main():
         "total_energy": r.total_energy,
         "digest": sched_digest(r.schedule),
     }
+    # heterogeneous per-instance SLO curves (PR 5): captured from the
+    # REFERENCE engine, so the pin is independent of the fast engine's
+    # scaled-offset machinery (which is exactly what it protects)
+    from repro.core.dag import merge
+    from repro.core.schedulers_reference import schedule_reference
+    from repro.core.vos import slo_mix
+    n = 24
+    merged = merge([wl.instance(i) for i in range(n)], name=f"x{n}")
+    ref = schedule_reference(merged, pool, cost, policy="vos",
+                             curves=slo_mix(n, horizon=6.0 * n))
+    out[f"vos_hetero_n{n}"] = {
+        "makespan": ref.makespan,
+        "mean_utilization": ref.mean_utilization,
+        "total_energy": ref.total_energy,
+        "digest": sched_digest(ref),
+        "captured_from": "reference engine "
+                         "(schedulers_reference.schedule_vos)",
+    }
     with open("tests/golden_sched.json", "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     print("wrote tests/golden_sched.json")

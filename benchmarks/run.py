@@ -96,7 +96,7 @@ def bench_beyond_policies(n_instances: int) -> None:
 
 def bench_vos(n_instances: int) -> None:
     from repro.core.simulator import sweep_policies
-    from repro.core.vos import system_vos, uniform_specs
+    from repro.core.vos import slo_mix, system_vos, uniform_specs
     from repro.pipeline.workloads import ds_workload
     res = sweep_policies(ds_workload(), n_instances=n_instances,
                          policies=("eft", "etf", "rr", "vos"))
@@ -107,6 +107,16 @@ def bench_vos(n_instances: int) -> None:
     for r in res:
         v = system_vos(r.schedule, specs)
         row("vos", f"{r.policy}_system_vos", f"{v:.2f}",
+            f"of {n_instances}")
+    # per-instance SLO curves (PR 5): the VoS scheduler maximises against
+    # each instance's own curve; score the same mix it optimised
+    # (strict=True: the mix must cover every instance)
+    curves = slo_mix(n_instances, horizon=horizon / 2)
+    het = sweep_policies(ds_workload(), n_instances=n_instances,
+                         policies=("eft", "vos"), curves=curves)
+    for r in het:
+        v = system_vos(r.schedule, curves, strict=True)
+        row("vos", f"{r.policy}_hetero_system_vos", f"{v:.2f}",
             f"of {n_instances}")
 
 

@@ -15,7 +15,8 @@ from repro.core.schedulers import (POLICIES, SCHEDULERS, Assignment,
                                    OnlineEngine, Schedule, schedule)
 from repro.core.online import (OnlineDriver, OnlineRunResult,
                                restart_from_history, run_online)
-from repro.core.vos import VoSSpec, system_vos, uniform_specs
+from repro.core.vos import (ValueCurve, VoSSpec, instance_curves, slo_mix,
+                            system_vos, uniform_specs)
 from repro.core import simulator
 
 __all__ = [
@@ -26,5 +27,6 @@ __all__ = [
     "POLICIES", "SCHEDULERS", "Assignment", "OnlineEngine", "Schedule",
     "schedule",
     "OnlineDriver", "OnlineRunResult", "restart_from_history", "run_online",
-    "VoSSpec", "system_vos", "uniform_specs", "simulator",
+    "ValueCurve", "VoSSpec", "instance_curves", "slo_mix",
+    "system_vos", "uniform_specs", "simulator",
 ]

@@ -27,7 +27,6 @@ TPU roofline mode
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np

@@ -18,7 +18,7 @@ schedulers consume (work estimate, in/out bytes, preferred families).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

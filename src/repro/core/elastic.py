@@ -23,13 +23,12 @@ pure for property testing.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 
 # ---------------------------------------------------------------------------
@@ -129,15 +128,21 @@ class HealthMonitor:
         return [w for w, h in self.health.items() if h.alive]
 
 
-def prune_pool(pool, monitor: "HealthMonitor"):
+def prune_pool(pool, monitor: "HealthMonitor",
+               also_drop: Sequence[str] = ()):
     """Scheduler-side mitigation: the surviving :class:`ResourcePool` after
-    dropping the monitor's dead workers (worker ids are PE names).
+    dropping the monitor's dead workers (worker ids are PE names) plus any
+    explicitly named PEs — typically ``monitor.stragglers()``, so slow
+    workers can be rotated out before they miss heartbeats.
 
     Feed the result to ``OnlineDriver.repool`` (repro.core.online) so the
     live scheduling engine re-plans onto the surviving PEs without a full
     restart — the JITA loop of "continuous provisioning and
-    re-provisioning" closed over the workload manager."""
-    healthy = set(monitor.healthy())
+    re-provisioning" closed over the workload manager. Scheduler state
+    that is *workload*-scoped (placed history by location, per-instance
+    VoS value curves) survives the re-plan; only pool-derived state is
+    re-keyed."""
+    healthy = set(monitor.healthy()) - set(also_drop)
     return pool.subset(p.name for p in pool.pes if p.name in healthy)
 
 

@@ -18,11 +18,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
-import numpy as np
 
-from repro.core.cost_model import CostModel, LearnedCostModel
+from repro.core.cost_model import LearnedCostModel
 from repro.core.dag import PipelineDAG, Task
 from repro.core.resources import FRONTEND, ResourcePool
 from repro.core.schedulers import Schedule

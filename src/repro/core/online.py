@@ -14,22 +14,29 @@ ever see.
 Admission gate (why deferred admission is exact)
 ------------------------------------------------
 Every policy key the engine uses leads with a time-like component that is
-bounded below by the candidate task's frozen ``ready_at``, which is in turn
-bounded below by its instance's arrival time (EFT/Min-Min: finish; Hwang
-ETF: hold; ETF: ready_at itself; VoS: ``-decay(t)``, since its value curve
-is non-increasing). So while
+bounded below by a per-instance *arrival floor* (EFT/Min-Min: finish ≥
+arrival; Hwang ETF: hold; ETF: ready_at itself; VoS:
+``-curve.value(t)``, since each instance's value curve is non-increasing —
+also as computed in floats). The driver keeps pending instances in a heap
+ordered by ``(floor, arrival, submit order)``; while
 
-    ``policy.arrival_floor(next_arrival) > policy.peek_time()``
+    ``min pending floor > policy.peek_time()``
 
-no task of the next (or any later) pending instance can win — or even tie —
-the next placement, and the driver may defer its admission. The gate
-re-checks after every admission; when it stops admitting, the candidate
-set visible to the selector contains every candidate that could possibly
-be chosen, so each pop equals the batch engine's pop by induction. RR and
-HEFT have no time-keyed selection (``deferrable = False``): reproducing
-their batch schedules requires full foreknowledge, and the driver admits
-every pending instance before placing (documented degeneration — those
-policies are inherently offline).
+no task of *any* pending instance can win — or even tie — the next
+placement, and the driver may defer all of them. Floor order (not arrival
+order) matters once floors are heterogeneous: with per-instance VoS curves
+a later-arriving high-value instance can have a *lower* floor than an
+earlier low-value one, and must be admitted first. For every other policy
+the floor is the arrival time itself, so the heap degenerates to arrival
+order and the behaviour is unchanged. The gate re-checks after every
+admission (fresh candidates can only lower the best key, pulling more
+instances in); when it stops admitting, the candidate set visible to the
+selector contains every candidate that could possibly be chosen, so each
+pop equals the batch engine's pop by induction. RR and HEFT have no
+time-keyed selection (``deferrable = False``): reproducing their batch
+schedules requires full foreknowledge, and the driver admits every
+pending instance (in arrival order) before placing (documented
+degeneration — those policies are inherently offline).
 
 Elastic re-plan
 ---------------
@@ -55,7 +62,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG
@@ -117,7 +124,23 @@ class OnlineDriver:
         self.eng = OnlineEngine(pool, self.cost,
                                 contended_links=contended_links)
         self.policy = make_policy_run(policy, self.eng, **policy_kw)
+        #: pending submissions in (arrival, submit order) — the durable
+        #: record order
         self._pending: List[Tuple[float, int, PipelineDAG]] = []
+        #: gate view of the pending set, ordered by the policy's
+        #: per-instance arrival floor (built lazily; floors may need policy
+        #: state that only exists after the first admission, and are
+        #: invalidated by repool — pool-derived VoS defaults re-derive)
+        self._gate: Optional[List[Tuple[float, float, int, PipelineDAG]]] = None
+        #: lazy-deletion marks, one set per heap the stale entry can still
+        #: sit in: an instance admitted from the gate leaves its (t, seq,
+        #: dag) tuple in _pending (drained by _drain_pending), one admitted
+        #: in arrival order leaves its floor entry in _gate (skipped by the
+        #: gate loop). Seqs are dropped as the stale entries are popped, so
+        #: driver memory tracks the live pending set, not total submissions
+        self._dead_pending: set = set()
+        self._dead_gate: set = set()
+        self._n_pending = 0
         self._seq = 0
         self.instances: List[InstanceState] = []
         self._inst_of: List[int] = []  # tid -> index into self.instances
@@ -127,14 +150,53 @@ class OnlineDriver:
         self._live = 0
 
     # -- submission / admission ----------------------------------------------
-    def submit(self, dag: PipelineDAG, arrival_t: float = 0.0) -> None:
-        """Queue ``dag`` to arrive at ``arrival_t`` (not yet admitted)."""
-        heapq.heappush(self._pending, (float(arrival_t), self._seq, dag))
+    def submit(self, dag: PipelineDAG, arrival_t: float = 0.0,
+               curve=None) -> None:
+        """Queue ``dag`` to arrive at ``arrival_t`` (not yet admitted).
+
+        ``curve`` attaches a per-instance SLO
+        (:class:`repro.core.vos.ValueCurve`) for the VoS policy — the
+        streaming counterpart of ``schedule_vos(curves=...)``; the curve is
+        registered before admission so the admission gate's floor is exact
+        for this instance."""
+        arrival_t = float(arrival_t)
+        if curve is not None:
+            add = getattr(self.policy, "add_curve", None)
+            if add is None:
+                raise ValueError(
+                    f"submit(curve=...) needs the 'vos' policy, not "
+                    f"{self.policy_name!r}")
+            add(dag, curve)
+        heapq.heappush(self._pending, (arrival_t, self._seq, dag))
+        if self._gate is not None:
+            heapq.heappush(self._gate,
+                           (self.policy.arrival_floor(arrival_t, dag),
+                            arrival_t, self._seq, dag))
         self._seq += 1
+        self._n_pending += 1
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        return self._n_pending
+
+    def pending_submissions(self) -> List[Tuple[PipelineDAG, float]]:
+        """Live (dag, arrival) submissions in (arrival, submit) order —
+        the not-yet-admitted half of the durable record
+        :func:`restart_from_history` consumes. For the VoS policy the
+        record additionally includes :meth:`slo_curves` (per-instance
+        curves are policy state, not derivable from the DAGs)."""
+        live = [(t, seq, dag) for (t, seq, dag) in self._pending
+                if seq not in self._dead_pending]
+        live.sort(key=lambda e: (e[0], e[1]))
+        return [(dag, t) for (t, _seq, dag) in live]
+
+    def slo_curves(self) -> dict:
+        """Snapshot of the per-instance VoS curve map (instance id →
+        :class:`repro.core.vos.ValueCurve`; empty for other policies) —
+        the curve half of the durable record: pass it as ``curves=`` to
+        :func:`restart_from_history` so a rebuilt driver schedules under
+        the same SLOs."""
+        return dict(getattr(self.policy, "curves", ()) or {})
 
     @property
     def live_instances(self) -> int:
@@ -157,25 +219,62 @@ class OnlineDriver:
                 self.max_live = self._live
         return inst
 
+    def _drain_pending(self) -> None:
+        """Lazily pop _pending entries the floor gate already admitted
+        (their seqs are then fully retired)."""
+        pending = self._pending
+        dead = self._dead_pending
+        while pending and pending[0][1] in dead:
+            dead.discard(heapq.heappop(pending)[1])
+
+    def _pop_earliest(self) -> Tuple[float, int, PipelineDAG]:
+        """Pop the live pending entry with the earliest (arrival, submit)
+        key."""
+        self._drain_pending()
+        return heapq.heappop(self._pending)
+
     def _admit_due(self) -> None:
-        """Admit every pending instance whose arrival-time key floor does
+        """Admit every pending instance whose per-instance key floor does
         not exceed the current best candidate key (see module docstring);
         re-peek after each admission — fresh candidates may lower the
         best key and pull in further arrivals."""
-        pending = self._pending
         pol = self.policy
         eng = self.eng
-        while pending:
-            t = pending[0][0]
+        while self._n_pending:
             # only gate when live candidates exist: with an empty ready set
-            # the next arrival must be admitted regardless (and policy
-            # state — e.g. VoS's value curve — may not exist before the
-            # first admission)
-            if pol.deferrable and eng._ready:
-                best = pol.peek_time()
-                if best is not None and pol.arrival_floor(t) > best:
-                    break
-            _, _, dag = heapq.heappop(pending)
+            # the next arrival (in arrival order) must be admitted
+            # regardless (and policy state — e.g. VoS's default curve —
+            # may not exist before the first admission)
+            if not (pol.deferrable and eng._ready):
+                t, seq, dag = self._pop_earliest()
+                if self._gate is not None:
+                    self._dead_gate.add(seq)  # its floor entry lingers
+                self._n_pending -= 1
+                self._admit_now(dag, t)
+                continue
+            gate = self._gate
+            if gate is None:
+                gate = self._gate = []
+                self._dead_gate.clear()
+                dead = self._dead_pending
+                for t, seq, dag in self._pending:
+                    if seq not in dead:
+                        heapq.heappush(gate,
+                                       (pol.arrival_floor(t, dag), t, seq,
+                                        dag))
+            dead_gate = self._dead_gate
+            while gate and gate[0][2] in dead_gate:
+                dead_gate.discard(heapq.heappop(gate)[2])
+            if not gate:
+                break
+            floor, t, seq, dag = gate[0]
+            best = pol.peek_time()
+            if best is not None and floor > best:
+                break
+            heapq.heappop(gate)
+            self._dead_pending.add(seq)
+            self._drain_pending()
+            self._n_pending -= 1
             self._admit_now(dag, t)
 
     # -- the event loop -------------------------------------------------------
@@ -211,7 +310,7 @@ class OnlineDriver:
     def run(self) -> Schedule:
         """Drain all pending arrivals and live work."""
         while True:
-            if self.step() is None and not self._pending:
+            if self.step() is None and not self._n_pending:
                 break
         return self.schedule()
 
@@ -220,10 +319,16 @@ class OnlineDriver:
         """Apply a grown/shrunk pool to the live run: engine state is
         remapped/re-keyed (:meth:`OnlineEngine.repool`) and the policy run
         rebinds its selector over the survivors. O(live ready set · |PE|)
-        on the next step — independent of total instances admitted."""
+        on the next step — independent of total instances admitted.
+
+        Per-instance value curves survive untouched (they are
+        pool-independent SLOs); only the gate's floor heap is rebuilt,
+        because a pool-*derived* VoS default curve is re-derived from the
+        survivors on rebind."""
         self.pool = new_pool
         self.eng.repool(new_pool)
         self.policy.rebind()
+        self._gate = None
 
     # -- results --------------------------------------------------------------
     def schedule(self) -> Schedule:
@@ -269,12 +374,18 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
 
     ``admitted`` lists the (dag, arrival) instances the original run had
     admitted, in admission order; ``history`` its placement record, in
-    placement order; ``pending`` any not-yet-admitted submissions.
-    ``loc_of`` maps PE names absent from ``pool`` (removed by an elastic
-    shrink) to their location, so their history can be replayed (see
-    :meth:`repro.core.schedulers.OnlineEngine.replay`). Continuing the
-    returned driver must produce the same remaining placements as the
-    repooled original — differentially tested in tests/test_online.py.
+    placement order; ``pending`` any not-yet-admitted submissions
+    (:meth:`OnlineDriver.pending_submissions`). ``loc_of`` maps PE names
+    absent from ``pool`` (removed by an elastic shrink) to their location,
+    so their history can be replayed (see
+    :meth:`repro.core.schedulers.OnlineEngine.replay`). For the VoS policy
+    the durable record also includes the per-instance curve map — pass
+    ``curves=original.slo_curves()`` (it is policy state: curves attached
+    via ``submit(curve=...)`` are not derivable from the DAGs, and
+    omitting them silently falls back to the default curve). Continuing
+    the returned driver must produce the same remaining placements as the
+    repooled original — differentially tested in tests/test_online.py and
+    tests/test_vos_curves.py.
     """
     drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
     for dag, t in admitted:

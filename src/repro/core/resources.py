@@ -16,8 +16,7 @@ change (see repro.core.cost_model.tpu_pool / paper_pool).
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 FRONTEND = "frontend"
 BACKEND = "backend"
@@ -176,20 +175,20 @@ class ResourcePool:
             if self.intra_location_bandwidth == float("inf"):
                 return 0.0
             return nbytes / self.intra_location_bandwidth
-        l = self.link(src, dst)
-        if l is None:
+        link = self.link(src, dst)
+        if link is None:
             raise KeyError(f"no link {src!r}->{dst!r}")
-        return l.transfer_time(nbytes)
+        return link.transfer_time(nbytes)
 
     def index(self) -> PoolIndex:
         """Int-id snapshot for the scheduling engine (cached; the PE list and
         link matrix are effectively immutable after construction)."""
         if self._index is None:
             locations = tuple(self.locations)
-            loc_id = {l: i for i, l in enumerate(locations)}
+            loc_id = {loc: i for i, loc in enumerate(locations)}
             pe_loc_id = tuple(loc_id[p.location] for p in self.pes)
             loc_pes = tuple(
-                tuple(j for j, l in enumerate(pe_loc_id) if l == li)
+                tuple(j for j, li_of in enumerate(pe_loc_id) if li_of == li)
                 for li in range(len(locations)))
             self._index = PoolIndex(
                 pes=tuple(self.pes),

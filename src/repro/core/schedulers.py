@@ -83,6 +83,17 @@ workload, wall-clock for the full n-instance sweep on one core):
     (streamed, period=5 s)      ~100 µs — tracks the
                                 *live* set, flat in n    0.23 s  1.5 s      —
 
+Per-instance SLO curves (PR 5): the VoS policy's value model is the
+structured, piecewise-linear :class:`repro.core.vos.ValueCurve`, carried
+per pipeline instance (``schedule_vos(curves=...)``, the online driver's
+``submit(curve=...)``). Each curve segment is affine in finish time, so
+:class:`_ClassedBest` gained *scaled* offset sub-heaps — tag = (PE[, link],
+segment slope), entries expiring when their finish crosses a segment
+boundary — which keeps the whole decay region (not just the flat tail past
+the hard deadline) on the no-revalidation fast path: vos_hetero n=1000 in
+~1.9 s vs ~1.4 s for the flat-curve default. Legacy opaque ``value_fn``
+callables remain the slow path (no grouping, no offset form, no deferral).
+
 Online mode (PR 3): :class:`OnlineEngine` adds ``admit(dag, arrival_t)`` /
 ``repool(new_pool)`` / ``replay(history)`` on top of this engine, and each
 policy is a :class:`_PolicyRun` strategy object whose ``step()`` the
@@ -108,11 +119,15 @@ import bisect
 import dataclasses
 import heapq
 import itertools
+import math
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel, row_ids
 from repro.core.dag import PipelineDAG, Task
 from repro.core.resources import DirtyHorizons, ProcessingElement, ResourcePool
+from repro.core.vos import ValueCurve, instance_id
+
+_INF = float("inf")
 
 POLICIES = ("rr", "etf", "etf_hwang", "eft", "heft", "minmin", "vos")
 
@@ -691,6 +706,38 @@ _MONOTONE_ERR = (
     "value_fn must be non-increasing in finish time)")
 
 
+def _aligned_expiry(end: float, maxdur: Optional[float],
+                    exec_: float) -> float:
+    """Smallest base at which the saturated finish crosses ``end`` under
+    the exact float formula the VoS key closure uses (``base + exec`` /
+    ``(base + maxdur) + exec``) — so a scaled-offset entry is drained on
+    precisely the placement that moves its finish into the next curve
+    segment, never an ulp before or after. The algebraic estimate is
+    refined by a few nextafter steps; if rounding puts the true boundary
+    further than that (catastrophic cancellation), a conservative value is
+    returned and the candidate simply rides the absolute lazy heap."""
+    if maxdur is None:
+        def f_at(x: float) -> float:
+            return x + exec_
+        x = end - exec_
+    else:
+        def f_at(x: float) -> float:
+            return (x + maxdur) + exec_
+        x = (end - exec_) - maxdur
+    if f_at(x) >= end:
+        for _ in range(4):
+            x = math.nextafter(x, -_INF)
+            if f_at(x) < end:
+                return math.nextafter(x, _INF)
+        return -_INF  # give up: the caller routes to the absolute heap
+    for _ in range(4):
+        x2 = math.nextafter(x, _INF)
+        if f_at(x2) >= end:
+            return x2
+        x = x2
+    return x  # f_at(x) < end: early drain is safe, stale trust is not
+
+
 class _CandidateClass:
     """One equivalence class of interchangeable ready tasks.
 
@@ -746,6 +793,25 @@ class _ClassedBest:
         most once per crossing. The top heap ranks lower-bound
         advertisements of every sub-structure root.
 
+    **Scaled mode** (``scaled=True``, the piecewise-affine VoS form): a
+    candidate whose leading key component is *affine* in the base —
+    ``key0 = A·(base + static offset) + intercept`` with a per-candidate
+    slope ``A ≥ 0`` (for VoS, the negated slope of the value-curve segment
+    its finish currently sits in) — is exact in an offset heap shared by
+    entries of equal ``A``: heap tags become ``(pj, A)`` / ``(pj, link,
+    A)``, and advancing the base shifts every key in one heap by the same
+    ``A·Δbase``, so order stays permanent exactly as in the unit-slope
+    heaps. The affine form is only valid while the finish stays inside its
+    curve segment, so each entry carries an *expiry base* (the base value
+    at which the finish crosses the segment's right boundary) in a
+    side-heap per tag: before a tag is advertised or its root trusted,
+    :meth:`_drain` retires every entry whose expiry has passed (marking it
+    dead by sequence number) and re-inserts the candidate classified
+    against its *current* segment. Draining only at advertise/surface time
+    is sound because true keys are monotone — a stale advert stays a lower
+    bound; a *fresh* advert is only ever computed over drained (exact)
+    entries.
+
     Exactness argument (extends the module-docstring invariant): every
     stored key/offset is a lower bound of the candidate's true key — true
     keys are monotone in engine state, ``finish ≥ base + offset`` holds for
@@ -760,47 +826,57 @@ class _ClassedBest:
 
     __slots__ = ("_eng", "_key", "_sig", "_off", "_shift", "_needs_f",
                  "_classes", "_by_sig", "_offs", "_links", "_abs", "_top",
-                 "_adv")
+                 "_adv", "_scaled", "_exp", "_dead", "_seq")
 
     def __init__(self, eng: _Engine, keyfn: Callable[[int, int], Tuple],
                  sigfn: Optional[Callable[[int], Tuple]] = None,
                  offfn: Optional[Callable[[int, int, float], Optional[Tuple]]]
                  = None,
-                 shift: Tuple[int, ...] = (2,)) -> None:
+                 shift: Tuple[int, ...] = (2,), scaled: bool = False) -> None:
         self._eng = eng
         self._key = keyfn
         self._sig = sigfn
         #: offfn(tid, pj, base) → static offset key components for a
         #: candidate whose key is exactly ``comps`` shifted by the base
-        #: horizons per ``shift`` (None: not representable — e.g. VoS below
-        #: the hard deadline, where the value curve is nonlinear in finish).
-        #: offfn=None disables offset form entirely (custom VoS curves).
+        #: horizons per ``shift`` (None: not representable). In scaled mode
+        #: the contract is ``(A, expiry_base, comps)`` instead: comp0
+        #: materialises as ``A*base + comp0`` and the form expires once
+        #: ``base >= expiry_base`` (``inf`` = permanent). offfn=None
+        #: disables offset form entirely (legacy opaque value_fn).
         self._off = offfn
         #: per-component base codes for materialisation: 0 = static,
         #: 1 = pe_free[pj], 2 = the heap's base (pe_free for F-heaps,
         #: max(link_free, pe_free) for joint-base heaps). EFT/Min-Min:
         #: (2,); Hwang ETF: (1, 2) — its leading hold component rides
-        #: pe_free only; VoS past the hard deadline: (0, 2).
+        #: pe_free only. Ignored in scaled mode (fixed (scaled, 2) layout).
         self._shift = shift
         #: a pe_free-coded component constrains the joint-base regime:
         #: hold = pe_free requires ready_at ≤ pe_free, not just ≤ the base
         self._needs_f = 1 in shift
+        self._scaled = scaled
         self._classes: List[_CandidateClass] = []
         self._by_sig: Dict[Tuple, _CandidateClass] = {}
-        #: per-PE offset sub-heaps of (comps+(head_name,), cid, gen, head_tid)
-        self._offs: List[List[Tuple]] = [[] for _ in range(eng.n_pes)]
-        #: per-link offset heaps (entries from every PE of the destination
-        #: location): (comps+(head_name, pj), cid, gen, head_tid, pj)
-        self._links: Dict[Tuple[str, str], List[Tuple]] = {}
+        #: offset sub-heaps of (comps+(head_name,), cid, gen, head_tid[, seq])
+        #: keyed ``pj`` (legacy) or ``(pj, A)`` (scaled)
+        self._offs: Dict[object, List[Tuple]] = {}
+        #: joint-base offset heaps, keyed ``(pj, link)`` (legacy) or
+        #: ``(pj, link, A)`` (scaled)
+        self._links: Dict[Tuple, List[Tuple]] = {}
         #: global absolute lazy heap of (key, cid, gen, epoch, head_tid, pj)
         self._abs: List[Tuple] = []
-        #: (root lower-bound key, tag) adverts; tag = pj int for _offs[pj],
-        #: link key for _links, -1 for _abs. Equal advert keys imply the
-        #: same candidate, hence the same tag — tags never tie-compare
-        #: across types. Superseded adverts are skipped via _adv identity.
+        #: (root lower-bound key, tag) adverts; tag = the sub-heap key for
+        #: _offs/_links, -1 for _abs. Equal advert keys imply the same
+        #: candidate, hence the same tag — tags never tie-compare across
+        #: types. Superseded adverts are skipped via _adv identity.
         self._top: List[Tuple] = []
         #: latest advertised key object per tag
         self._adv: Dict[object, Optional[Tuple]] = {}
+        #: scaled mode only: per-tag (expiry_base, seq, cid, gen, tid)
+        #: side-heaps, the dead entry sequence numbers they produced, and
+        #: the sequence counter
+        self._exp: Dict[object, List[Tuple]] = {}
+        self._dead: set = set()
+        self._seq = 0
 
     # -- regime classification ------------------------------------------------
     #
@@ -868,24 +944,87 @@ class _ClassedBest:
         return tuple(c + (f if shift[i] == 1 else b) if i < n and shift[i]
                      else c for i, c in enumerate(comps)) + (pj,)
 
-    def _advertise_off(self, pj: int, force: bool = False) -> None:
-        sub = self._offs[pj]
-        if not sub:
-            self._adv[pj] = None
-            return
-        k = self._mat(pj, sub[0][0])
-        cur = self._adv.get(pj)
-        if force or cur is None or k < cur:
-            self._adv[pj] = k
-            heapq.heappush(self._top, (k, pj))
+    # -- scaled-mode helpers --------------------------------------------------
+    def _base_of(self, tag: Tuple) -> float:
+        """Current base horizon of a scaled tag: pe_free for ``(pj, A)``,
+        max(link_free, pe_free) for ``(pj, link, A)``."""
+        eng = self._eng
+        base = eng._pe_free[tag[0]]
+        if len(tag) == 3:
+            b = eng.link_free.get(tag[1], 0.0)
+            if b > base:
+                base = b
+        return base
 
-    def _advertise_link(self, tag: Tuple[int, Tuple[str, str]],
-                        force: bool = False) -> None:
-        sub = self._links[tag]
+    def _mat_s(self, tag: Tuple, entry: Tuple) -> Tuple:
+        """Materialise a scaled entry into the candidate's true full key.
+
+        Heap *order* rides the static sort comps ``(A·(s-b) - v + e, s,
+        name)`` — shifted uniformly by the shared slope ``A`` per base
+        advance, hence permanent — but the materialised key is recomputed
+        from the entry's payload with the key closure's own float
+        expression, so cross-structure comparisons (and the final pj
+        tie-break between equal-real-key candidates of one class on
+        different PEs) are bit-exact, not merely ulp-close."""
+        base = self._base_of(tag)
+        v, b, slope, nxt, e, maxdur, exec_ = entry[5]
+        f = base + exec_ if maxdur is None else (base + maxdur) + exec_
+        if slope != 0.0:
+            v = v + (f - b) * slope
+            if nxt is not None and v < nxt:
+                v = nxt
+        return (-(v - e), f, entry[0][2], tag[0])
+
+    def _drain(self, tag: Tuple) -> None:
+        """Retire every entry of a scaled tag whose affine form expired
+        (the base crossed its curve-segment boundary): mark it dead by seq
+        and re-insert its class head classified against the *current*
+        segment. Called before a tag is advertised or its root trusted, so
+        fresh adverts only ever cover exact entries; recursion through the
+        re-pushes is bounded by the number of distinct tags (each nested
+        advertise finds its own tag already drained)."""
+        exp = self._exp.get(tag)
+        if not exp:
+            return
+        base = self._base_of(tag)
+        dead = self._dead
+        classes = self._classes
+        jobs = []
+        while exp and exp[0][0] <= base:
+            _, seq, cid, gen, _tid = heapq.heappop(exp)
+            dead.add(seq)
+            cls = classes[cid]
+            members = cls.members
+            if gen != cls.gen or not members:
+                continue  # superseded elsewhere; nothing live to re-insert
+            jobs.append((cls, members[0][0], members[0][1]))
+        pj = tag[0]
+        for cls, name, tid in jobs:
+            self._push_entry(cls, name, tid, pj)
+
+    def _advertise_off(self, tag, force: bool = False) -> None:
+        if self._scaled:
+            self._drain(tag)
+        sub = self._offs.get(tag)
         if not sub:
             self._adv[tag] = None
             return
-        k = self._mat_l(tag[0], tag[1], sub[0][0])
+        k = (self._mat_s(tag, sub[0]) if self._scaled
+             else self._mat(tag, sub[0][0]))
+        cur = self._adv.get(tag)
+        if force or cur is None or k < cur:
+            self._adv[tag] = k
+            heapq.heappush(self._top, (k, tag))
+
+    def _advertise_link(self, tag: Tuple, force: bool = False) -> None:
+        if self._scaled:
+            self._drain(tag)
+        sub = self._links.get(tag)
+        if not sub:
+            self._adv[tag] = None
+            return
+        k = (self._mat_s(tag, sub[0]) if self._scaled
+             else self._mat_l(tag[0], tag[1], sub[0][0]))
         cur = self._adv.get(tag)
         if force or cur is None or k < cur:
             self._adv[tag] = k
@@ -901,36 +1040,70 @@ class _ClassedBest:
             self._adv[-1] = k
             heapq.heappush(self._top, (k, -1))
 
+    def _off_entry(self, cid: int, gen: int, name: str, tid: int,
+                   pj: int) -> Optional[Tuple]:
+        """Classify (tid, pj) and build its offset-heap entry if the
+        candidate is offset-representable right now. Returns
+        ``(kind, tag, entry, expiry)`` — kind 0 = F-heap, 1 = link heap,
+        expiry None for permanent entries — or None (absolute heap)."""
+        if self._off is None:
+            return None
+        eng = self._eng
+        regime, lk = self._classify(tid, pj, eng._ready_at[tid])
+        if regime == 2:
+            return None
+        if regime == 0:
+            base = eng._pe_free[pj]
+        else:
+            b = eng.link_free.get(lk, 0.0)
+            f = eng._pe_free[pj]
+            base = b if b > f else f
+        got = self._off(tid, pj, base)
+        if got is None:
+            return None
+        if not self._scaled:
+            tag = pj if regime == 0 else (pj, lk)
+            return regime, tag, (got + (name,), cid, gen, tid), None
+        a, expiry, comps, payload = got
+        self._seq += 1
+        tag = (pj, a) if regime == 0 else (pj, lk, a)
+        entry = (comps + (name,), cid, gen, tid, self._seq, payload)
+        return regime, tag, entry, (None if expiry == _INF else expiry)
+
+    def _route_offset(self, cid: int, gen: int, name: str, tid: int,
+                      pj: int) -> bool:
+        """Push the candidate into its offset sub-heap if representable
+        (advertising the tag); False → caller routes to the abs heap."""
+        got = self._off_entry(cid, gen, name, tid, pj)
+        if got is None:
+            return False
+        kind, tag, entry, expiry = got
+        store = self._offs if kind == 0 else self._links
+        sub = store.get(tag)
+        if sub is None:
+            sub = store[tag] = []
+        heapq.heappush(sub, entry)
+        if expiry is not None:
+            exp = self._exp.get(tag)
+            if exp is None:
+                exp = self._exp[tag] = []
+            heapq.heappush(exp, (expiry, entry[4], cid, gen, tid))
+        if kind == 0:
+            self._advertise_off(tag)
+        else:
+            self._advertise_link(tag)
+        return True
+
     def _push_entry(self, cls: _CandidateClass, name: str, tid: int,
                     pj: int) -> None:
         """Insert the class-head candidate for PE ``pj`` into whichever
         sub-structure currently represents its key exactly (offset forms)
         or as a lazy lower bound (absolute heap)."""
-        eng = self._eng
-        comps = None
-        if self._off is not None:
-            regime, lk = self._classify(tid, pj, eng._ready_at[tid])
-            if regime == 0:
-                comps = self._off(tid, pj, eng._pe_free[pj])
-            elif regime == 1:
-                b = eng.link_free.get(lk, 0.0)
-                f = eng._pe_free[pj]
-                comps = self._off(tid, pj, b if b > f else f)
-        if comps is None:
+        if not self._route_offset(cls.cid, cls.gen, name, tid, pj):
+            eng = self._eng
             heapq.heappush(self._abs, (self._key(tid, pj), cls.cid, cls.gen,
                                        eng.dirty.epoch(pj), tid, pj))
             self._advertise_abs()
-        elif regime == 0:
-            heapq.heappush(self._offs[pj],
-                           (comps + (name,), cls.cid, cls.gen, tid))
-            self._advertise_off(pj)
-        else:
-            tag = (pj, lk)
-            sub = self._links.get(tag)
-            if sub is None:
-                sub = self._links[tag] = []
-            heapq.heappush(sub, (comps + (name,), cls.cid, cls.gen, tid))
-            self._advertise_link(tag)
 
     def _push_class(self, cls: _CandidateClass) -> None:
         """(Re)insert entries for the class's current head on every PE."""
@@ -986,40 +1159,40 @@ class _ClassedBest:
         if not members:
             del self._by_sig[cls.sig]
 
-    def _pop_off(self, k: Tuple, pj: int,
+    def _pop_off(self, k: Tuple, tag,
                  accept: bool = True) -> Optional[Tuple[int, int]]:
         """Process a surfaced F-offset-sub-heap advert; None means 'fixed
         something, rescan the top'. ``accept=False`` (peek): on success the
         candidate is left in place and its advert re-pushed."""
-        sub = self._offs[pj]
+        sub = self._offs[tag]
         comps, cid, gen, head_tid = sub[0]
         cls = self._classes[cid]
         members = cls.members
         if gen != cls.gen or not members:
             heapq.heappop(sub)  # retired gen / exhausted class
-            self._advertise_off(pj, force=True)
+            self._advertise_off(tag, force=True)
             return None
         name, tid = members[0]
         if tid != head_tid:
             # head advanced to a larger name: re-key the entry in place
             heapq.heapreplace(sub, (comps[:-1] + (name,), cid, gen, tid))
-            self._advertise_off(pj, force=True)
+            self._advertise_off(tag, force=True)
             return None
-        cur = self._mat(pj, comps)
+        cur = self._mat(tag, comps)
         if cur != k:
             # pe_free advanced since this advert; re-advertise at the
             # current materialisation (heap order is unaffected)
-            self._advertise_off(pj, force=True)
+            self._advertise_off(tag, force=True)
             return None
         if not accept:
-            self._adv[pj] = k
-            heapq.heappush(self._top, (k, pj))
-            return tid, pj
+            self._adv[tag] = k
+            heapq.heappush(self._top, (k, tag))
+            return tid, tag
         self._accept(cls)
         if not members:
             heapq.heappop(sub)
-        self._advertise_off(pj, force=True)
-        return tid, pj
+        self._advertise_off(tag, force=True)
+        return tid, tag
 
     def _pop_link(self, k: Tuple, tag: Tuple[int, Tuple[str, str]],
                   accept: bool = True) -> Optional[Tuple[int, int]]:
@@ -1052,6 +1225,51 @@ class _ClassedBest:
         if not members:
             heapq.heappop(sub)
         self._advertise_link(tag, force=True)
+        return tid, tag[0]
+
+    def _pop_scaled(self, k: Tuple, tag: Tuple,
+                    accept: bool = True) -> Optional[Tuple[int, int]]:
+        """Process a surfaced scaled-offset advert (F or link tag). Drains
+        expired entries first, so a root that survives is affine-exact;
+        beyond that, the fix-ups mirror the legacy pops (dead seqs replace
+        gen retirement as the extra eviction reason)."""
+        self._drain(tag)
+        is_link = len(tag) == 3
+        advertise = self._advertise_link if is_link else self._advertise_off
+        sub = (self._links if is_link else self._offs).get(tag)
+        if not sub:
+            advertise(tag, force=True)  # clears the advert
+            return None
+        comps, cid, gen, head_tid, seq, payload = sub[0]
+        if seq in self._dead:
+            heapq.heappop(sub)
+            self._dead.discard(seq)
+            advertise(tag, force=True)
+            return None
+        cls = self._classes[cid]
+        members = cls.members
+        if gen != cls.gen or not members:
+            heapq.heappop(sub)
+            advertise(tag, force=True)
+            return None
+        name, tid = members[0]
+        if tid != head_tid:
+            heapq.heapreplace(sub, (comps[:-1] + (name,), cid, gen, tid, seq,
+                                    payload))
+            advertise(tag, force=True)
+            return None
+        cur = self._mat_s(tag, sub[0])
+        if cur != k:
+            advertise(tag, force=True)
+            return None
+        if not accept:
+            self._adv[tag] = k
+            heapq.heappush(self._top, (k, tag))
+            return tid, tag[0]
+        self._accept(cls)
+        if not members:
+            heapq.heappop(sub)
+        advertise(tag, force=True)
         return tid, tag[0]
 
     def _pop_abs(self, k: Tuple,
@@ -1089,32 +1307,23 @@ class _ClassedBest:
             # roots are re-validated, but any observed violation means
             # results are untrustworthy — fail loud.
             raise ValueError(_MONOTONE_ERR)
-        comps = None
-        if self._off is not None:
-            regime, lk = self._classify(tid, pj, eng._ready_at[tid])
-            if regime == 0:
-                comps = self._off(tid, pj, eng._pe_free[pj])
-                if comps is not None:
-                    heapq.heappop(heap)
-                    heapq.heappush(self._offs[pj],
-                                   (comps + (name,), cid, gen, tid))
-                    self._advertise_off(pj)
-            elif regime == 1:
-                b = eng.link_free.get(lk, 0.0)
-                f = eng._pe_free[pj]
-                comps = self._off(tid, pj, b if b > f else f)
-                if comps is not None:
-                    heapq.heappop(heap)
-                    tag = (pj, lk)
-                    sub = self._links.get(tag)
-                    if sub is None:
-                        sub = self._links[tag] = []
-                    heapq.heappush(sub, (comps + (name,), cid, gen, tid))
-                    self._advertise_link(tag)
-        if comps is None:
+        if self._route_offset(cid, gen, name, tid, pj):
+            heapq.heappop(heap)
+        else:
             heapq.heapreplace(heap, (cur, cid, gen, cur_ep, tid, pj))
         self._advertise_abs(force=True)
         return None
+
+    def _settle(self, k: Tuple, tag,
+                accept: bool) -> Optional[Tuple[int, int]]:
+        """Dispatch a surfaced advert to its sub-structure's pop."""
+        if tag.__class__ is int:
+            if tag < 0:
+                return self._pop_abs(k, accept=accept)
+            return self._pop_off(k, tag, accept=accept)
+        if self._scaled:
+            return self._pop_scaled(k, tag, accept=accept)
+        return self._pop_link(k, tag, accept=accept)
 
     def pop_best(self) -> Tuple[int, int]:
         """Return the exact (tid, pj) the reference scan would pick, and
@@ -1128,11 +1337,7 @@ class _ClassedBest:
                 heappop(top)  # superseded advertisement
                 continue
             heappop(top)
-            if tag.__class__ is int:
-                got = (self._pop_abs(k) if tag < 0
-                       else self._pop_off(k, tag))
-            else:
-                got = self._pop_link(k, tag)
+            got = self._settle(k, tag, accept=True)
             if got is not None:
                 return got
 
@@ -1158,11 +1363,7 @@ class _ClassedBest:
                 heappop(top)
                 continue
             heappop(top)
-            if tag.__class__ is int:
-                got = (self._pop_abs(k, accept=False) if tag < 0
-                       else self._pop_off(k, tag, accept=False))
-            else:
-                got = self._pop_link(k, tag, accept=False)
+            got = self._settle(k, tag, accept=False)
             if got is not None:
                 return k
 
@@ -1468,10 +1669,14 @@ class _PolicyRun:
         key; None when no candidate exists."""
         raise NotImplementedError
 
-    def arrival_floor(self, t: float) -> float:
-        """Lower bound of the leading key component over every candidate an
-        instance arriving at ``t`` could ever contribute (all its tasks
-        have ``ready_at >= t``, and keys are monotone in time)."""
+    def arrival_floor(self, t: float,
+                      dag: Optional[PipelineDAG] = None) -> float:
+        """Lower bound of the leading key component over every candidate
+        the instance ``dag`` arriving at ``t`` could ever contribute (all
+        its tasks have ``ready_at >= t``, and keys are monotone in time).
+        Policies whose floor depends only on the arrival time ignore
+        ``dag``; VoS resolves the instance's own value curve, so the floor
+        is exact per instance rather than per arrival."""
         return t
 
     def step(self) -> int:
@@ -1506,8 +1711,9 @@ class _ClassedRun(_PolicyRun):
     def _selector(self) -> _ClassedBest:
         sel = self.sel
         if sel is None:
-            key, sigfn, offfn, shift = self._selector_parts()
-            self.sel = sel = _ClassedBest(self.eng, key, sigfn, offfn, shift)
+            key, sigfn, offfn, shift, scaled = self._selector_parts()
+            self.sel = sel = _ClassedBest(self.eng, key, sigfn, offfn, shift,
+                                          scaled)
         return sel
 
     def step(self) -> int:
@@ -1579,7 +1785,7 @@ class _EftRun(_RankedClassedRun):
             # saturated key = (base + off_base, neg_rank, name, pj)
             return (off_base(tid, pj), neg_rank[tid])
 
-        return key, sigfn, offfn, (2,)
+        return key, sigfn, offfn, (2,), False
 
 
 class _HwangRun(_RankedClassedRun):
@@ -1605,7 +1811,7 @@ class _HwangRun(_RankedClassedRun):
             # saturated key = (pe_free, base + off_base, neg_rank, name, pj)
             return (0.0, off_base(tid, pj), neg_rank[tid])
 
-        return key, sigfn, offfn, (1, 2)
+        return key, sigfn, offfn, (1, 2), False
 
 
 class _MinminRun(_ClassedRun):
@@ -1631,65 +1837,152 @@ class _MinminRun(_ClassedRun):
             # saturated key = (base + off_base, name, pj)
             return (off_base(tid, pj),)
 
-        return key, sigfn, offfn, (2,)
+        return key, sigfn, offfn, (2,), False
 
 
 class _VosRun(_ClassedRun):
+    """VoS-greedy over structured per-instance value curves.
+
+    Every task carries its instance's :class:`repro.core.vos.ValueCurve`
+    (``curves`` maps instance id → curve; ``default_curve`` covers the
+    rest; with neither, a pool-derived linear-decay default is built on
+    first admission exactly as before). Because every curve segment is
+    affine in finish time, *every* candidate is offset-representable: the
+    key ``(-(value(f) - ew·energy), f, name, pj)`` restricted to the
+    segment holding ``f`` is ``(A·base + comp0, base + offset, ...)`` with
+    ``A`` the negated segment slope — the scaled-offset form of
+    :class:`_ClassedBest`, which extends PR 2's flat-value fast path (past
+    the hard deadline only) to the whole decay region. The legacy opaque
+    ``value_fn`` callable stays accepted as the documented slow path: it
+    may inspect the task, so class grouping, offset heaps and online
+    admission deferral are all disabled for it.
+    """
+
     policy_name = "vos"
 
     def __init__(self, eng: _Engine,
                  value_fn: Optional[Callable[[Task, float], float]] = None,
-                 energy_weight: float = 1e-4) -> None:
+                 energy_weight: float = 1e-4,
+                 curves: Optional[Mapping[str, ValueCurve]] = None,
+                 default_curve: Optional[ValueCurve] = None) -> None:
         super().__init__(eng)
+        if isinstance(value_fn, ValueCurve):
+            if default_curve is not None:
+                raise ValueError(
+                    "pass the curve as value_fn OR default_curve, not both")
+            default_curve = value_fn
+            value_fn = None
+        if value_fn is not None and (curves or default_curve is not None):
+            raise ValueError(
+                "the legacy value_fn callable is exclusive with structured "
+                "curves (it disables grouping/deferral; curves do not)")
         self._custom = value_fn is not None
         self.value_fn = value_fn
         self.energy_weight = energy_weight
-        self.hard: Optional[float] = None
-        self._decay: Optional[Callable[[float], float]] = None
-        self._first_dag: Optional[PipelineDAG] = None
+        self.curves: Dict[str, ValueCurve] = dict(curves or {})
+        self.default_curve = default_curve
+        #: pool-derived fallback curve, in a one-slot cell so key/offset
+        #: closures built before the first defaulted admission still see it
+        self._pool_default: List[Optional[ValueCurve]] = [None]
+        self._first_default_dag: Optional[PipelineDAG] = None
+        #: per-tid curve in admission order (None = pool-derived default);
+        #: append-only, closures bind the list object
+        self._task_curves: List[Optional[ValueCurve]] = []
+        self._neg_ew = any((c.energy_weight or 0.0) < 0
+                           for c in self.curves.values())
+        if default_curve is not None and (default_curve.energy_weight
+                                          or 0.0) < 0:
+            self._neg_ew = True
 
     @property
     def deferrable(self) -> bool:
-        # a custom curve may inspect the task (no uniform arrival floor);
-        # a negative energy weight would break key0 >= -decay(t)
-        return not self._custom and self.energy_weight >= 0
+        # a legacy callable may inspect the task (no per-instance floor);
+        # a negative energy weight would break key0 >= -value(t)
+        return (not self._custom and self.energy_weight >= 0
+                and not self._neg_ew)
+
+    def add_curve(self, dag: PipelineDAG, curve: ValueCurve) -> None:
+        """Register ``curve`` for every instance id in ``dag`` — the
+        online driver's ``submit(curve=...)`` hook; must precede the
+        instance's admission."""
+        if self._custom:
+            raise ValueError("per-instance curves are exclusive with the "
+                             "legacy value_fn callable")
+        if (curve.energy_weight or 0.0) < 0:
+            self._neg_ew = True
+        curves = self.curves
+        for nm in dag.index().names:
+            inst = instance_id(nm)
+            prior = curves.get(inst)
+            if prior is not None and prior != curve:
+                # tasks without a '#idx' suffix all map to the implicit
+                # instance "0": two raw DAGs submitted with different
+                # curves would silently re-SLO each other — fail loud
+                raise ValueError(
+                    f"instance id {inst!r} already has a different curve; "
+                    f"suffix task names '#<idx>' (PipelineDAG.instance) "
+                    f"to give each submission its own id")
+            curves[inst] = curve
 
     def _build_default_curve(self, dag: PipelineDAG) -> None:
-        from repro.core import vos as vos_mod
         rank = _rank(dag, self.eng.pool, self.eng.cost)
         horizon = max(rank.values()) * 2.0 + 1e-9
-        self.hard = hard = horizon * 4
-        soft = horizon / 2
-
-        def decay(f: float) -> float:
-            return vos_mod.linear_decay(f, soft=soft, hard=hard)
-
-        self._decay = decay
-        self.value_fn = lambda t, f: decay(f)
+        self._first_default_dag = dag
+        self._pool_default[0] = ValueCurve.linear_decay(horizon / 2,
+                                                        horizon * 4)
 
     def on_admit(self, dag: PipelineDAG) -> None:
-        if self._custom or self._decay is not None:
-            # the default curve is frozen at first admission: all instances
-            # of one template share the critical-path horizon (the batch
-            # path admits the whole merged problem in one call)
+        if self._custom:
             return
-        self._first_dag = dag
-        self._build_default_curve(dag)
+        curves = self.curves
+        default = self.default_curve
+        task_curves = self._task_curves
+        need_default = False
+        for nm in dag.index().names:
+            c = curves.get(instance_id(nm), default)
+            task_curves.append(c)
+            if c is None:
+                need_default = True
+        if need_default and self._pool_default[0] is None:
+            # the pool-derived default is frozen at the first admission
+            # that needs it: all defaulted instances of one template share
+            # the critical-path horizon (the batch path admits the whole
+            # merged problem in one call)
+            self._build_default_curve(dag)
 
     def rebind(self) -> None:
         super().rebind()
-        if not self._custom and self._first_dag is not None:
+        if self._first_default_dag is not None:
             # the default horizon is a pool-derived heuristic (mean exec
             # times over the pool's PEs), so an elastic re-plan re-derives
             # it from the surviving pool — matching restart-from-history.
-            # Pool-independent SLO curves belong in a custom value_fn.
-            self._build_default_curve(self._first_dag)
+            # Structured SLO curves are pool-independent and survive as-is.
+            self._build_default_curve(self._first_default_dag)
 
-    def arrival_floor(self, t: float) -> float:
-        # any candidate from an instance arriving at t has finish >= t, a
-        # value <= decay(t) (the curve is non-increasing) and a
-        # non-negative energy term, so key[0] = -vos_rate >= -decay(t)
-        return -self._decay(t)
+    def arrival_floor(self, t: float,
+                      dag: Optional[PipelineDAG] = None) -> float:
+        # any candidate from the arriving instance has finish >= t, a value
+        # <= its curve's value(t) (curves are non-increasing, also as
+        # computed in floats) and a non-negative energy term, so
+        # key[0] = -vos_rate >= -value(t) — exact per instance
+        if dag is None:
+            c = self._pool_default[0]
+            # no instance information: only the shared default gives a
+            # usable bound; otherwise admit unconditionally
+            return -c.value(t) if c is not None else float("-inf")
+        best = None
+        for inst in {instance_id(nm) for nm in dag.index().names}:
+            c = self.curves.get(inst, self.default_curve)
+            if c is None:
+                if self._pool_default[0] is None:
+                    # first defaulted instance seen anywhere: derive the
+                    # shared default from it (its admission would, too)
+                    self._build_default_curve(dag)
+                c = self._pool_default[0]
+            f = -c.value(t)
+            if best is None or f < best:
+                best = f
+        return best if best is not None else float("-inf")
 
     def _selector_parts(self) -> Tuple:
         eng = self.eng
@@ -1698,39 +1991,90 @@ class _VosRun(_ClassedRun):
         tasks = di.tasks
         fin = eng._finish_fn()
         energy = eng._energy
-        value_fn = self.value_fn
-        ew = self.energy_weight
+        ew_pol = self.energy_weight
+
+        if self._custom:
+            value_fn = self.value_fn
+
+            def key(tid: int, pj: int) -> Tuple:
+                f = fin(tid, pj)
+                vos_rate = value_fn(tasks[tid], f) - ew_pol * energy(tid, pj)
+                return (-vos_rate, f, names[tid], pj)
+
+            # the callable may inspect the task: no grouping, no offset
+            # form — every candidate rides the absolute lazy heap
+            return key, None, None, (0, 2), False
+
+        task_curves = self._task_curves
+        cell = self._pool_default
 
         def key(tid: int, pj: int) -> Tuple:
             f = fin(tid, pj)
-            vos_rate = value_fn(tasks[tid], f) - ew * energy(tid, pj)
+            c = task_curves[tid]
+            if c is None:
+                c = cell[0]
+            ew = c.energy_weight
+            if ew is None:
+                ew = ew_pol
+            vos_rate = c.value(f) - ew * energy(tid, pj)
             return (-vos_rate, f, names[tid], pj)
 
         rows = eng._exec_row_ids
         erows = eng._energy_row_ids
-        sigfn = ((lambda tid: (rows[tid], erows[tid]))
-                 if not self._custom and rows is not None
-                 and erows is not None else None)
-        # -value_fn(finish) is nonlinear in finish, so saturated keys are
-        # not base + constant in general — but past the hard deadline the
-        # default curve is pinned at exactly 0 and the key degenerates to
-        # (energy_weight·energy, finish, name, pj): comp0 static, comp1
-        # offset. finish only grows, so 'minimum finish ≥ hard' holds
-        # forever. At instance counts where scaling matters the bulk of the
-        # run is past the deadline; earlier candidates stay on the
-        # absolute lazy path.
-        offfn = None
-        if not self._custom:
-            off_base = eng._off_base
-            hard = self.hard
+        sigfn = None
+        if rows is not None and erows is not None:
+            # tasks are interchangeable only within one curve (None = the
+            # shared pool default); equal curves of different instances
+            # hash equal and fold into one class
+            def sigfn(tid: int) -> Tuple:
+                return (rows[tid], erows[tid], task_curves[tid])
 
-            def offfn(tid: int, pj: int, base: float) -> Optional[Tuple]:
-                s = off_base(tid, pj)
-                if base + s < hard:
-                    return None
-                return (ew * energy(tid, pj), s)
+        off_base = eng._off_base
+        plan = eng._plan
+        pe_loc = eng._pi.pe_location
+        exec_of = eng._exec
 
-        return key, sigfn, offfn, (0, 2)
+        def offfn(tid: int, pj: int, base: float) -> Optional[Tuple]:
+            # On the curve segment holding the saturated finish the key
+            # head is -(v_seg + (f - b_seg)*slope - ew*E) = A*base + const
+            # with A = -slope >= 0 — affine in the base, so exact in a
+            # scaled offset heap until the finish crosses the segment's
+            # right boundary. The entry carries (v, b, slope, clamp, e,
+            # maxdur, exec) so materialisation replays the key closure's
+            # exact float expression (see _ClassedBest._mat_s), and the
+            # expiry base is aligned to the same boundary test the key
+            # closure's bisect performs.
+            exec_ = exec_of(tid, pj)
+            maxdur = None
+            for _lk, dur in plan(tid, pe_loc[pj]):
+                if maxdur is None or dur > maxdur:
+                    maxdur = dur
+            f = base + exec_ if maxdur is None else (base + maxdur) + exec_
+            c = task_curves[tid]
+            if c is None:
+                c = cell[0]
+            b, v, slope, end, nxt = c.segment(f)
+            if end == _INF:
+                expiry = _INF
+            else:
+                expiry = _aligned_expiry(end, maxdur, exec_)
+                if expiry <= base:
+                    return None  # already at the boundary: stay lazy
+            ew = c.energy_weight
+            if ew is None:
+                ew = ew_pol
+            e = ew * energy(tid, pj)
+            s = off_base(tid, pj)
+            if slope == 0.0:
+                comps = (-(v - e), s)
+                payload = (v, 0.0, 0.0, None, e, maxdur, exec_)
+                return 0.0, expiry, comps, payload
+            a = -slope
+            comps = (a * (s - b) - v + e, s)
+            payload = (v, b, slope, nxt, e, maxdur, exec_)
+            return a, expiry, comps, payload
+
+        return key, sigfn, offfn, (0, 2), True
 
 
 class _EtfRun(_PolicyRun):
@@ -2055,20 +2399,30 @@ def schedule_heft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
 def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                  arrival: Optional[Mapping[str, float]] = None,
                  value_fn: Optional[Callable[[Task, float], float]] = None,
-                 energy_weight: float = 1e-4) -> Schedule:
+                 energy_weight: float = 1e-4,
+                 curves: Optional[Mapping[str, ValueCurve]] = None,
+                 default_curve: Optional[ValueCurve] = None) -> Schedule:
     """VoS-greedy: maximise time-dependent value minus energy cost.
 
-    ``value_fn(task, finish_time)`` defaults to a soft-deadline curve based
-    on the task's critical-path slack (see repro.core.vos.linear_decay).
-    For the incremental engine's lazy heap to stay exact, ``value_fn`` must
-    be non-increasing in finish time — true of any deadline/decay curve
-    (value never *grows* by finishing later). The default value curve
-    depends on finish time only — custom curves may inspect the task, which
-    makes tasks non-interchangeable, so class grouping (and online
-    admission deferral) is only enabled for the default.
+    Per-instance SLOs are structured :class:`repro.core.vos.ValueCurve`
+    objects: ``curves`` maps instance id (the ``#idx`` task-name suffix of
+    :meth:`repro.core.dag.PipelineDAG.instance`) → curve, ``default_curve``
+    covers instances without an entry, and with neither a soft/hard
+    linear-decay default is derived from the critical-path horizon exactly
+    as before. Structured curves are piecewise-affine, so every candidate
+    stays on the class-grouped scaled-offset fast path and online
+    admission deferral keeps exact per-instance floors.
+
+    ``value_fn(task, finish_time)`` is the legacy escape hatch (a
+    :class:`ValueCurve` passed here counts as ``default_curve``): an
+    opaque callable may inspect the task, which makes tasks
+    non-interchangeable — class grouping, offset heaps and online deferral
+    are all disabled, and it must be non-increasing in finish time for the
+    lazy heap to stay exact (value never *grows* by finishing later).
     """
     return _run_batch("vos", dag, pool, cost, arrival,
-                      value_fn=value_fn, energy_weight=energy_weight)
+                      value_fn=value_fn, energy_weight=energy_weight,
+                      curves=curves, default_curve=default_curve)
 
 
 SCHEDULERS: Dict[str, Callable[..., Schedule]] = {

@@ -15,9 +15,8 @@ two engines’ outputs compare directly.
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG, Task
@@ -271,24 +270,49 @@ def schedule_heft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
 def schedule_vos(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
                  arrival: Optional[Mapping[str, float]] = None,
                  value_fn: Optional[Callable[[Task, float], float]] = None,
-                 energy_weight: float = 1e-4) -> Schedule:
+                 energy_weight: float = 1e-4,
+                 curves: Optional[Mapping[str, object]] = None,
+                 default_curve=None) -> Schedule:
     """VoS-greedy: maximise time-dependent value minus energy cost.
 
-    ``value_fn(task, finish_time)`` defaults to a soft-deadline curve based
-    on the task's critical-path slack (see repro.core.vos.linear_decay).
+    Mirrors the per-instance curve semantics of the live engine (``curves``
+    maps instance id → :class:`repro.core.vos.ValueCurve`, ``default_curve``
+    covers the rest, ``value_fn`` is the legacy callable escape hatch; with
+    none of them, a soft/hard linear-decay default is derived from the
+    critical-path horizon) so heterogeneous-SLO schedules can be
+    differentially pinned against this exhaustive first-wins scan. Curve
+    evaluation goes through ``ValueCurve.value`` in both engines — the one
+    shared float path — so the comparison is byte-exact, not approximate.
     """
     from repro.core import vos as vos_mod
     eng = _ReferenceEngine(dag, pool, cost, arrival)
     rank = _rank(dag, pool, cost)
+    if isinstance(value_fn, vos_mod.ValueCurve):
+        default_curve = value_fn
+        value_fn = None
     if value_fn is None:
-        horizon = max(rank.values()) * 2.0 + 1e-9
-        value_fn = lambda t, f: vos_mod.linear_decay(f, soft=horizon / 2, hard=horizon * 4)
+        cmap = dict(curves or {})
+        fallback = default_curve
+        if fallback is None:
+            horizon = max(rank.values()) * 2.0 + 1e-9
+            fallback = vos_mod.ValueCurve.linear_decay(horizon / 2,
+                                                       horizon * 4)
+
+        def rate(task, f, pe):
+            c = cmap.get(vos_mod.instance_id(task.name), fallback)
+            ew = c.energy_weight
+            if ew is None:
+                ew = energy_weight
+            return c.value(f) - ew * cost.energy(task, pe)
+    else:
+        def rate(task, f, pe):
+            return value_fn(task, f) - energy_weight * cost.energy(task, pe)
     while not eng.done():
         best = None
         for task in eng.ready:
             for pe in pool.pes:
                 f = eng.eft(task, pe)
-                vos_rate = (value_fn(task, f) - energy_weight * cost.energy(task, pe))
+                vos_rate = rate(task, f, pe)
                 key = (-vos_rate, f, task.name)
                 if best is None or key < best[:3]:
                     best = (*key, task, pe)

@@ -44,16 +44,25 @@ class RunResult:
 
 
 def merge_instances(workload: PipelineDAG, n_instances: int,
-                    period: float = 0.0
-                    ) -> Tuple[PipelineDAG, Dict[str, float]]:
+                    period: float = 0.0, curves: object = None
+                    ) -> Tuple[PipelineDAG, Dict[str, float],
+                               Dict[str, object]]:
     """Replicate ``workload`` ×``n_instances`` into one scheduling problem.
 
-    Returns the merged DAG plus the arrival map (empty when ``period<=0``).
+    Returns ``(merged DAG, arrival map, per-instance curve map)`` — the
+    arrival map is empty when ``period <= 0`` and the curve map when no
+    ``curves`` are given. ``curves`` may be a mapping of instance id →
+    :class:`repro.core.vos.ValueCurve`, a sequence of curves (instance
+    ``i`` → ``curves[i]``), or a callable ``i -> curve``; the normalised
+    id-keyed mapping rides along so :func:`run_instances` can hand the
+    *same* SLO mix to the batch VoS scheduler and the online driver.
+
     :meth:`PipelineDAG.instance` copies each template task's cost fields
     (op, work, in/out bytes) verbatim, so the n replicas of a template task
     get bitwise-identical cost rows (``repro.core.cost_model.row_ids``) —
     which is exactly what lets the scheduling engine fold them into shared
-    candidate classes on instance sweeps. Build the merged problem once and
+    candidate classes on instance sweeps (tasks sharing a curve share a
+    class; distinct SLO classes split). Build the merged problem once and
     reuse it across policies (:func:`sweep_policies` does) so the DAG index
     and cost tables are shared rather than rebuilt per policy."""
     instances = [workload.instance(i) for i in range(n_instances)]
@@ -63,15 +72,23 @@ def merge_instances(workload: PipelineDAG, n_instances: int,
         for i, inst in enumerate(instances):
             for t in inst.tasks:
                 arrival[t.name] = i * period
-    return merged, arrival
+    curve_map: Dict[str, object] = {}
+    if curves is not None:
+        if callable(curves):
+            curve_map = {str(i): curves(i) for i in range(n_instances)}
+        elif isinstance(curves, Mapping):
+            curve_map = dict(curves)
+        else:
+            curve_map = {str(i): c for i, c in enumerate(curves)}
+    return merged, arrival, curve_map
 
 
 def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
                   policy: str = "eft", n_instances: int = 100,
                   period: float = 0.0, label: str = "",
                   online: bool = False,
-                  _premerged: Optional[Tuple[PipelineDAG, Dict[str, float]]] = None
-                  ) -> RunResult:
+                  _premerged: Optional[Tuple] = None,
+                  **policy_kw) -> RunResult:
     """Submit ``n_instances`` copies of ``workload`` (all at once, or one
     every ``period`` seconds) and schedule them on ``pool``.
 
@@ -79,21 +96,34 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
     and the incremental engine in :mod:`repro.core.schedulers`, so 1k-instance
     sweeps are tractable; ``wall_seconds`` records the scheduler cost.
     ``_premerged`` (from :func:`merge_instances`) skips the merge when the
-    caller sweeps several policies over one problem.
+    caller sweeps several policies over one problem; a curve map it carries
+    is handed to the VoS policy (and ignored by the others).
+
+    Extra keyword arguments go to the policy — e.g.
+    ``run_instances(..., policy="vos", curves=slo_mix(n, horizon))`` runs a
+    heterogeneous per-instance SLO sweep, batch or (``online=True``)
+    streamed.
 
     ``online=True`` routes through the streaming driver
     (:func:`repro.core.online.run_online`): instances are admitted into a
     live engine as they arrive instead of merged up front — byte-identical
     schedules, per-event cost independent of ``n_instances``, and the extra
     telemetry of :class:`repro.core.online.OnlineRunResult`."""
+    if _premerged is not None and len(_premerged) > 2 and _premerged[2] \
+            and policy == "vos":
+        policy_kw.setdefault("curves", _premerged[2])
     if online:
         from repro.core.online import run_online
         return run_online(workload, pool, cost, policy=policy,
-                          n_instances=n_instances, period=period, label=label)
+                          n_instances=n_instances, period=period, label=label,
+                          **policy_kw)
     t0 = time.perf_counter()
-    merged, arrival = _premerged or merge_instances(workload, n_instances,
-                                                    period)
-    sched = schedule(merged, pool, cost, policy=policy, arrival=arrival)
+    if _premerged is not None:
+        merged, arrival = _premerged[0], _premerged[1]
+    else:
+        merged, arrival, _ = merge_instances(workload, n_instances, period)
+    sched = schedule(merged, pool, cost, policy=policy, arrival=arrival,
+                     **policy_kw)
     return RunResult(label or pool.describe(), policy, sched.makespan,
                      sched.mean_utilization, sched.total_energy,
                      sched.location_split(), sched,
@@ -140,11 +170,14 @@ def best_config(results: Sequence[RunResult]) -> RunResult:
 
 def sweep_policies(workload: PipelineDAG, pool: Optional[ResourcePool] = None,
                    cost: Optional[CostModel] = None, n_instances: int = 100,
-                   policies: Sequence[str] = ("eft", "etf", "rr")
-                   ) -> List[RunResult]:
+                   policies: Sequence[str] = ("eft", "etf", "rr"),
+                   curves: object = None) -> List[RunResult]:
+    """Sweep ``policies`` over one shared merged problem. ``curves`` (any
+    form :func:`merge_instances` accepts) attaches per-instance SLO curves,
+    consumed by the VoS policy and ignored by the rest."""
     cost = cost or CostModel()
     pool = pool or paper_pool()  # paper's best: 3 ARM+1 Volta | 3 Xeon+1 V100+1 Alveo
-    premerged = merge_instances(workload, n_instances)
+    premerged = merge_instances(workload, n_instances, curves=curves)
     out = []
     for pol in policies:
         out.append(run_instances(workload, pool, cost, policy=pol,

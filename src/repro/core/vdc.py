@@ -28,8 +28,7 @@ import numpy as np
 
 import jax
 
-from repro.core.cost_model import (TPU_PEAK_FLOPS, TPU_HBM_BW, RooflineTerms,
-                                   roofline_time)
+from repro.core.cost_model import RooflineTerms, roofline_time
 
 
 @dataclasses.dataclass(frozen=True)

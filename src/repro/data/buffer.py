@@ -15,7 +15,7 @@ transparently merge spilled history with the RAM tail.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict, deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 

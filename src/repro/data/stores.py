@@ -17,7 +17,6 @@ lives, used by the executor when charging cross-location reads.
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 

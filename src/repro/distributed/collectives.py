@@ -22,7 +22,6 @@ train step uses XLA's own all-reduce by default — these are the opt-in
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -20,7 +20,6 @@ DESIGN.md §5, documented per arch in the returned dict's ``notes``.
 from __future__ import annotations
 
 import contextlib
-import math
 import threading
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 

@@ -27,12 +27,11 @@ one cell crashing doesn't take the sweep down).
 """
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -198,9 +197,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
                 lambda s: NamedSharding(mesh, s),
                 sh.cache_specs(specs["caches"]),
                 is_leaf=lambda x: isinstance(x, P))
-            bspec = lambda leaf: NamedSharding(
-                mesh, rules.spec(("batch",) + (None,) * (np.ndim(leaf) - 1),
-                                 np.shape(leaf)))
+            def bspec(leaf):
+                return NamedSharding(
+                    mesh, rules.spec(("batch",) + (None,) * (np.ndim(leaf) - 1),
+                                     np.shape(leaf)))
             if info["kind"] == "prefill":
                 pre = build_prefill_step(cfg)
 

@@ -26,8 +26,6 @@ reports no per-collective breakdown. This module parses
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -15,10 +15,8 @@ JITA-4DS layering (edge pipeline feeds VDC steps).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.data.loader import LoaderConfig, Prefetcher, TokenBatchLoader

@@ -14,11 +14,9 @@ the modality frontend supplies precomputed embeddings:
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import numpy as np
 
-import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 

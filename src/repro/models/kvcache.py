@@ -19,7 +19,7 @@ frozen embeds — O(n_vision_tokens), cheap relative to a decode step).
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,6 @@ created by ``init_*`` functions taking a PRNG key.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -187,7 +185,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     # shapes those stacks dominated temp memory (§Perf, measured)
     @jax.checkpoint
     def body(carry, xs):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kb, vb, pb, vb_mask = xs                     # (B,chunk,Hkv,D) ...
         s = jnp.einsum("bqhgd,bchd->bqhgc", qf, kb.astype(jnp.float32))
         if softcap > 0:
@@ -201,18 +199,18 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, s.max(-1))
         alpha = jnp.exp(m - m_new)
         p_ = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + p_.sum(-1)
+        lsum_new = lsum * alpha + p_.sum(-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bqhgc,bchd->bqhgd", p_, vb.astype(jnp.float32))
-        return (m_new, l_new, acc_new), None
+        return (m_new, lsum_new, acc_new), None
 
     init = (jnp.full((B, Sq, Hkv, G), -1e30, jnp.float32),
             jnp.zeros((B, Sq, Hkv, G), jnp.float32),
             jnp.zeros((B, Sq, Hkv, G, D), jnp.float32))
     xs = (kc.swapaxes(0, 1), vc.swapaxes(0, 1),
           pc.swapaxes(0, 1), mc.swapaxes(0, 1))
-    (m, l, acc), _ = jax.lax.scan(body, init, xs)
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(body, init, xs)
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return out.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
@@ -256,14 +254,14 @@ def sharded_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         s = jnp.where(mask, s, -1e30)
         m = s.max(-1)                                       # (B,Hkv,G)
         p_ = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
-        l = p_.sum(-1)
+        lsum = p_.sum(-1)
         acc = jnp.einsum("bhgc,bchd->bhgd", p_, v_l.astype(jnp.float32))
         # merge partial softmax stats across capacity shards
         m_g = jax.lax.pmax(m, tp_axis)
         corr = jnp.exp(m - m_g)
-        l_g = jax.lax.psum(l * corr, tp_axis)
+        lsum_g = jax.lax.psum(lsum * corr, tp_axis)
         acc_g = jax.lax.psum(acc * corr[..., None], tp_axis)
-        out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+        out = acc_g / jnp.maximum(lsum_g, 1e-30)[..., None]
         return out.reshape(q_l.shape[0], 1, Hq, D).astype(q_l.dtype)
 
     return shard_map(

@@ -18,7 +18,6 @@ matches them):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

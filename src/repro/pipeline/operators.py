@@ -25,12 +25,11 @@ ingest, window aggregation, cleaning, export.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import numpy as np
 
 try:  # device backends need jax; host backends must work without it
-    import jax
     import jax.numpy as jnp
     _HAS_JAX = True
 except Exception:  # pragma: no cover

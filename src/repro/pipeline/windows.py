@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -21,7 +21,6 @@ raw batches per instance) and a 12 Mbps edge↔DC channel.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
 
 from repro.core.dag import PipelineDAG, Task
 
@@ -112,8 +111,6 @@ def ds_workload_executable(raw_mb: float = 16.0) -> PipelineDAG:
         t = g.task(name)
         t.backends = {"host": make(np_backend=True),
                       "device": make(np_backend=False)}
-
-    import numpy as _np
 
     def _b(op):  # raw operator pair
         return {True: ops.host_backend(op), False: ops.device_backend(op)}

@@ -22,9 +22,7 @@ steps are the same ones a real deployment would drive asynchronously.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -33,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.serve.serve_step import (build_decode_step, build_prefill_step,
-                                    init_serve_caches, serve_config)
+                                    init_serve_caches)
 
 
 @dataclasses.dataclass

@@ -21,11 +21,10 @@ gathers to host memory — same format, same commit protocol.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import numpy as np
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +81,8 @@ def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def init_opt_state(params: Params, cfg: OptConfig) -> Dict[str, Any]:
-    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     if cfg.name == "adamw":
         return {"m": jax.tree_util.tree_map(f32, params),
                 "v": jax.tree_util.tree_map(f32, params),
@@ -134,7 +135,8 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
     else:
         gnorm = global_norm(grads)
-    tf32 = lambda t: t.astype(jnp.float32)
+    def tf32(t):
+        return t.astype(jnp.float32)
 
     if cfg.name in ("adamw", "adamw8bit"):
         bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
@@ -162,7 +164,8 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
                                            is_leaf=lambda x: isinstance(x, tuple))
             new_state = {"m": new_m, "v": new_v, "step": step}
         else:  # adamw8bit: dequant → update → requant
-            is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+            def is_q(x):
+                return isinstance(x, dict) and set(x) == {"q", "s"}
 
             def upd8(p, g, mq, vq):
                 m = _dq8(mq["q"], mq["s"], p.shape)
@@ -185,7 +188,8 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
 
     elif cfg.name == "adafactor":
         d2 = 1 - cfg.b2 ** step.astype(jnp.float32)
-        is_fac = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        def is_fac(x):
+            return isinstance(x, dict) and ("vr" in x or "v" in x)
 
         def updf(p, g, f):
             g = tf32(g)

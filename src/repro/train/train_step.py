@@ -12,9 +12,7 @@ perf configs.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -30,8 +30,7 @@ from repro.models.config import ModelConfig
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import build_train_step, init_train_state
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault_tolerance import (FailureInjector, RecoveryPolicy,
-                                         FailureEvent)
+from repro.train.fault_tolerance import FailureInjector, RecoveryPolicy
 
 
 @dataclasses.dataclass

@@ -5,8 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import CostModel
-from repro.core.dag import PipelineDAG, Task, merge
-from repro.core.resources import Link, ProcessingElement, ResourcePool, paper_pool
+from repro.core.dag import PipelineDAG, Task
+from repro.core.resources import ProcessingElement, paper_pool
 from repro.core.schedulers import SCHEDULERS, schedule
 from repro.pipeline.workloads import ds_workload
 

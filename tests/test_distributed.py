@@ -5,14 +5,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count set (the main test
 process keeps the single real CPU device, per the dry-run contract).
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

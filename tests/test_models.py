@@ -1,6 +1,5 @@
 """Model substrate: family correctness, decode consistency, caches."""
 
-import dataclasses
 
 import numpy as np
 import pytest

@@ -158,7 +158,7 @@ def _run_split(policy, drop, k, n_instances=12, period=3.0, grow_to=None):
         assert drv.step() is not None
     history = list(drv.eng.assignments)
     admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
-    pending = [(d, t) for (t, _, d) in sorted(drv._pending)]
+    pending = drv.pending_submissions()
     loc_of = {p.name: p.location for p in pool.pes}
     new_pool = grow_to if grow_to is not None else pool.without(drop)
     drv.repool(new_pool)

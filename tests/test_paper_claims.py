@@ -14,7 +14,6 @@ constants are calibrated; see repro.pipeline.workloads).
 
 import pytest
 
-from repro.core.cost_model import CostModel
 from repro.core.simulator import (best_config, sweep_policies,
                                   sweep_resource_configs)
 from repro.pipeline.workloads import ds_workload

@@ -117,10 +117,17 @@ def _eft_selector(dag: PipelineDAG, pool, cost):
     names = eng._di.names
     neg_rank = [-rank[nm] for nm in names]
     fin = eng._finish_fn()
-    key = lambda tid, pj: (fin(tid, pj), neg_rank[tid], names[tid], pj)
     rows = eng._exec_row_ids
-    sigfn = lambda tid: (rows[tid], neg_rank[tid])
-    offfn = lambda tid, pj, base: (eng._off_base(tid, pj), neg_rank[tid])
+
+    def key(tid, pj):
+        return (fin(tid, pj), neg_rank[tid], names[tid], pj)
+
+    def sigfn(tid):
+        return (rows[tid], neg_rank[tid])
+
+    def offfn(tid, pj, base):
+        return (eng._off_base(tid, pj), neg_rank[tid])
+
     return eng, S._ClassedBest(eng, key, sigfn, offfn)
 
 

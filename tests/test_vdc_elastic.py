@@ -156,3 +156,20 @@ def test_reshard_on_current_devices():
     tree = {"w": np.ones((4, 4), np.float32)}
     out = el.reshard(tree, mesh, lambda leaf: P())
     assert np.asarray(out["w"]).sum() == 16
+
+
+def test_prune_pool_also_drops_stragglers():
+    """prune_pool(also_drop=monitor.stragglers()) rotates slow-but-alive
+    workers out of the pool alongside the dead ones."""
+    from repro.core.resources import paper_pool
+    pool = paper_pool()
+    mon = el.HealthMonitor([p.name for p in pool.pes])
+    for p in pool.pes:
+        for _ in range(4):
+            mon.observe(p.name, step_s=10.0 if p.name == "xeon1" else 1.0,
+                        now=1.0)
+    assert mon.stragglers() == ["xeon1"]
+    pruned = el.prune_pool(pool, mon, also_drop=mon.stragglers())
+    names = {p.name for p in pruned.pes}
+    assert "xeon1" not in names
+    assert len(names) == len(pool.pes) - 1

@@ -1,0 +1,502 @@
+"""Per-instance SLO value curves (piecewise-affine VoS) — PR 5.
+
+Four pillars:
+
+  * **ValueCurve unit coverage** — constructors (step / linear decay /
+    segmented exponential / constant), evaluation in every region (flat,
+    mid-decay, past-hard), energy weighting, validation, and the
+    float-monotonicity contract the scheduling engine relies on
+    (non-increasing *as computed*, probed with nextafter around every
+    breakpoint).
+  * **Heterogeneous-curve differentials** — schedules under per-instance
+    curve mixes must be byte-identical to the frozen reference engine
+    (golden pin + hypothesis differential), and the online driver must
+    match the batch path even when floor order differs from arrival order
+    (a late high-value instance jumping the admission gate).
+  * **Elastic path** — curves survive ``OnlineDriver.repool``, pinned
+    against ``restart_from_history`` with the same curve map.
+  * **API edges** — legacy ``value_fn`` stays the documented slow path and
+    is exclusive with structured curves; ``submit(curve=...)`` requires
+    the VoS policy; ``system_vos(strict=True)`` fails loud on missing
+    specs.
+"""
+
+import json
+import math
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedulers as S
+from repro.core.cost_model import CostModel
+from repro.core.dag import merge
+from repro.core.online import OnlineDriver, restart_from_history
+from repro.core.resources import paper_pool
+from repro.core.schedulers import assignment_digest, schedule
+from repro.core.schedulers_reference import schedule_reference
+from repro.core.simulator import run_instances
+from repro.core.vos import (
+    ValueCurve,
+    VoSSpec,
+    exponential_decay,
+    instance_curves,
+    instance_id,
+    linear_decay,
+    slo_mix,
+    system_vos,
+)
+from repro.pipeline.workloads import ds_workload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
+
+
+def _tuples(sched):
+    return [
+        (a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+        for a in sched.assignments
+    ]
+
+
+# ---------------------------------------------------------------------------
+# ValueCurve construction and evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_step_curve():
+    c = ValueCurve.step(10.0, value=3.0)
+    assert c.value(0.0) == 3.0
+    assert c.value(9.999) == 3.0
+    assert c.value(10.0) == 0.0  # left-closed segments: the drop is at 10
+    assert c.value(1e9) == 0.0
+
+
+def test_linear_decay_curve_regions():
+    c = ValueCurve.linear_decay(20.0, 60.0, value=2.0)
+    # flat region returns the anchor value exactly (no arithmetic)
+    assert c.value(0.0) == 2.0
+    assert c.value(20.0) == 2.0
+    # mid-decay agrees with the legacy closed form to float tolerance
+    mid = c.value(40.0)
+    assert mid == pytest.approx(linear_decay(40.0, 20.0, 60.0, 2.0), rel=1e-12)
+    assert 0.0 < mid < 2.0
+    # past the hard deadline the value is exactly zero
+    assert c.value(60.0) == 0.0
+    assert c.value(61.0) == 0.0
+
+
+def test_exponential_curve_approximates_exp():
+    tau, value = 30.0, 2.0
+    c = ValueCurve.exponential(tau, value=value, segments=16)
+    # exact at the chord anchors
+    for j in range(17):
+        t = 4.0 * tau * j / 16
+        assert c.value(t) == pytest.approx(value * math.exp(-t / tau), rel=1e-12)
+    # chords of a convex function sit above it, within the sagitta bound
+    for t in [1.0, 17.3, 55.5, 99.9]:
+        exact = value * math.exp(-t / tau)
+        assert c.value(t) >= exact - 1e-12
+        assert c.value(t) <= exact + 0.02 * value
+    # flat beyond the horizon
+    assert c.value(4.0 * tau) == c.value(1e9)
+
+
+def test_constant_and_from_spec():
+    assert ValueCurve.constant(5.0).value(1e12) == 5.0
+    spec = VoSSpec(10.0, 40.0, value=1.5, energy_weight=0.25)
+    c = ValueCurve.from_spec(spec)
+    for f in (0.0, 10.0, 25.0, 39.0, 40.0, 50.0):
+        assert c.of(f, energy=2.0) == pytest.approx(spec.of(f, energy=2.0), rel=1e-12)
+
+
+def test_energy_weight_rides_on_curve():
+    c = ValueCurve.step(10.0, value=1.0, energy_weight=0.5)
+    assert c.of(5.0, energy=1.0) == 0.5
+    # None defers the discount to the caller
+    assert ValueCurve.step(10.0).of(5.0, energy=1.0) == 1.0
+
+
+def test_shifted():
+    c = ValueCurve.linear_decay(10.0, 30.0)
+    s = c.shifted(100.0)
+    for f in (0.0, 5.0, 10.0, 20.0, 29.9, 30.0, 80.0):
+        assert s.value(f + 100.0) == pytest.approx(c.value(f), rel=1e-12)
+    assert s.value(50.0) == 1.0  # still inside the shifted flat region
+    with pytest.raises(ValueError, match="forward"):
+        c.shifted(-1.0)
+
+
+def test_curve_validation_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="slopes"):
+        ValueCurve((10.0,), (1.0, 0.5), (0.1, 0.0))  # growing segment
+    with pytest.raises(ValueError, match="non-increasing"):
+        ValueCurve((10.0,), (1.0, 2.0), (0.0, 0.0))  # value jumps up
+    with pytest.raises(ValueError, match="strictly"):
+        ValueCurve((10.0, 10.0), (1.0, 1.0, 0.0), (0.0, 0.0, 0.0))
+    with pytest.raises(ValueError, match="len"):
+        ValueCurve((10.0,), (1.0,), (0.0,))
+    with pytest.raises(ValueError, match="soft"):
+        ValueCurve.linear_decay(30.0, 10.0)
+
+
+def test_curve_float_monotonicity_contract():
+    """value() must be non-increasing *as computed in floats* — the
+    engine's monotone-key invariant and the admission gate's floor bound
+    both depend on it, including right at segment boundaries where naive
+    affine evaluation can dip or jump by an ulp."""
+    curves = list(slo_mix(12, horizon=77.7).values())
+    curves.append(ValueCurve.linear_decay(1e-3, 1e3 + 1e-7))
+    curves.append(ValueCurve.exponential(13.0, segments=3))
+    for c in curves:
+        probes = [0.0]
+        for b in c.breaks:
+            probes += [
+                math.nextafter(b, -math.inf),
+                b,
+                math.nextafter(b, math.inf),
+            ]
+            probes += [b * 0.5, b * 0.99, b * 1.01]
+        probes += [max(c.breaks, default=1.0) * 3.0]
+        probes = sorted(p for p in probes if p >= 0.0)
+        vals = [c.value(p) for p in probes]
+        for lo, hi in zip(vals[1:], vals):
+            assert lo <= hi, (c, probes)
+
+
+def test_instance_helpers():
+    assert instance_id("kmeans#7") == "7"
+    assert instance_id("kmeans") == "0"
+    cs = instance_curves([ValueCurve.step(5.0), ValueCurve.step(9.0)])
+    assert set(cs) == {"0", "1"} and cs["1"].breaks == (9.0,)
+    mix = slo_mix(9, horizon=50.0)
+    assert set(mix) == {str(i) for i in range(9)}
+    assert len({c for c in mix.values()}) > 3  # deadlines actually spread
+
+
+# ---------------------------------------------------------------------------
+# vos module fixes
+# ---------------------------------------------------------------------------
+
+
+def test_exponential_decay_closed_form():
+    assert exponential_decay(0.0, tau=10.0, value=2.0) == 2.0
+    assert exponential_decay(10.0, tau=10.0) == pytest.approx(math.exp(-1.0))
+
+
+def test_system_vos_strict_raises_on_missing_spec():
+    r = run_instances(
+        ds_workload(), paper_pool(), CostModel(), policy="eft", n_instances=3
+    )
+    specs = {"0": VoSSpec(1e3, 4e3), "1": VoSSpec(1e3, 4e3)}  # "2" missing
+    assert system_vos(r.schedule, specs) > 0.0  # lenient: silently skipped
+    with pytest.raises(KeyError, match="strict"):
+        system_vos(r.schedule, specs, strict=True)
+    # ValueCurve specs are accepted wherever VoSSpec is
+    curves = {str(i): ValueCurve.linear_decay(1e3, 4e3) for i in range(3)}
+    assert system_vos(r.schedule, curves, strict=True) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-curve scheduling: golden + differential pinning
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_vos_matches_golden():
+    """The checked-in heterogeneous golden digest was captured from the
+    *reference* engine (see benchmarks/capture_golden.py) — the fast
+    engine must reproduce it byte-for-byte."""
+    with open(GOLDEN) as f:
+        g = json.load(f)["vos_hetero_n24"]
+    curves = slo_mix(24, horizon=6.0 * 24)
+    r = run_instances(
+        ds_workload(),
+        paper_pool(),
+        CostModel(),
+        policy="vos",
+        n_instances=24,
+        curves=curves,
+    )
+    assert r.makespan == g["makespan"]
+    assert r.mean_utilization == g["mean_utilization"]
+    assert r.total_energy == g["total_energy"]
+    assert assignment_digest(r.schedule.assignments) == g["digest"]
+
+
+def test_hetero_vos_matches_reference_engine():
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    curves = slo_mix(10, horizon=80.0)
+    merged = merge([wl.instance(i) for i in range(10)], name="x10")
+    live = schedule(merged, pool, cost, policy="vos", curves=curves)
+    ref = schedule_reference(merged, pool, cost, policy="vos", curves=curves)
+    assert _tuples(live) == _tuples(ref)
+
+
+def test_default_curve_still_matches_reference_engine():
+    """No curves given: the pool-derived default must still pin against
+    the reference engine (both evaluate through ValueCurve.value now)."""
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    merged = merge([wl.instance(i) for i in range(8)], name="x8")
+    live = schedule(merged, pool, CostModel(), policy="vos")
+    ref = schedule_reference(merged, pool, CostModel(), policy="vos")
+    assert _tuples(live) == _tuples(ref)
+
+
+def _mix_for(seed: int, n: int, scale: float):
+    """Deterministic curve family indexed by a hypothesis seed — mixes the
+    three shapes, per-curve energy weights, and deadline spreads."""
+    out = {}
+    for i in range(n):
+        k = (seed + i) % 4
+        h = scale * (0.3 + ((seed * 13 + i * 7) % 10) / 5.0)
+        ew = 2e-4 if (seed + i) % 3 == 0 else None
+        if k == 0:
+            out[str(i)] = ValueCurve.linear_decay(h, 3.0 * h, energy_weight=ew)
+        elif k == 1:
+            out[str(i)] = ValueCurve.step(2.0 * h, value=1.0 + (i % 3))
+        elif k == 2:
+            out[str(i)] = ValueCurve.exponential(h, horizon=4.0 * h, segments=5)
+        # k == 3: no entry — falls back to the pool-derived default
+    return out
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_instances=st.integers(min_value=2, max_value=8),
+    scale=st.floats(min_value=10.0, max_value=200.0),
+)
+def test_hetero_differential_hypothesis_batch(seed, n_instances, scale):
+    """Random SLO mixes (all three shapes + defaulted instances + per-curve
+    energy weights): fast engine == reference engine, byte for byte."""
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    curves = _mix_for(seed, n_instances, scale)
+    merged = merge([wl.instance(i) for i in range(n_instances)], name=f"h{seed}")
+    live = schedule(merged, pool, cost, policy="vos", curves=curves)
+    ref = schedule_reference(merged, pool, cost, policy="vos", curves=curves)
+    assert _tuples(live) == _tuples(ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_instances=st.integers(min_value=2, max_value=8),
+    period=st.floats(min_value=0.0, max_value=15.0),
+)
+def test_hetero_differential_hypothesis_online(seed, n_instances, period):
+    """Random SLO mixes through the streaming driver: deferred admission
+    with per-instance floors stays byte-identical to the batch path."""
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    curves = _mix_for(seed, n_instances, 60.0)
+    batch = run_instances(
+        wl,
+        pool,
+        cost,
+        policy="vos",
+        n_instances=n_instances,
+        period=period,
+        curves=curves,
+    )
+    online = run_instances(
+        wl,
+        pool,
+        cost,
+        policy="vos",
+        n_instances=n_instances,
+        period=period,
+        online=True,
+        curves=curves,
+    )
+    assert _tuples(online.schedule) == _tuples(batch.schedule)
+
+
+def test_online_floor_order_beats_arrival_order():
+    """A late-arriving high-value instance has a *lower* key floor than
+    earlier low-value ones and must jump the admission gate — the case
+    where floor order and arrival order genuinely disagree."""
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    cold = ValueCurve.linear_decay(10.0, 30.0, value=0.2)
+    hot = ValueCurve.linear_decay(500.0, 900.0, value=5.0)
+    curves = {str(i): (hot if i >= 6 else cold) for i in range(8)}
+    batch = run_instances(
+        wl, pool, cost, policy="vos", n_instances=8, period=4.0, curves=curves
+    )
+    drv = OnlineDriver(pool, cost, policy="vos")
+    for i in range(8):
+        drv.submit(wl.instance(i), arrival_t=i * 4.0, curve=curves[str(i)])
+    online = drv.run()
+    assert _tuples(online) == _tuples(batch.schedule)
+
+
+def test_repool_with_curves_matches_restart():
+    """Per-instance curves survive the elastic re-plan path: a mid-run
+    shrink under a heterogeneous mix completes with exactly the placements
+    a restart-from-history (same curve map) makes."""
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    curves = slo_mix(12, horizon=100.0)
+    drv = OnlineDriver(pool, cost, policy="vos", curves=curves)
+    for i in range(12):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    for _ in range(50):
+        assert drv.step() is not None
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = {p.name: p.location for p in pool.pes}
+    new_pool = pool.without(["xeon2", "arm1"])
+    drv.repool(new_pool)
+    a = _tuples(drv.run())
+    drv_b = restart_from_history(
+        new_pool, cost, "vos", admitted, history, pending, loc_of, curves=curves
+    )
+    b = _tuples(drv_b.run())
+    assert a == b
+    assert len(a) == 12 * 16
+
+
+def test_curve_classes_fold_by_curve():
+    """Class grouping keys on the curve: n instances over k distinct SLO
+    classes cost k candidate classes per template task, not n."""
+    wl = ds_workload()
+    a = ValueCurve.step(100.0)
+    b = ValueCurve.linear_decay(50.0, 200.0)
+    curves = {str(i): (a if i % 2 else b) for i in range(10)}
+    merged = merge([wl.instance(i) for i in range(10)], name="x10")
+    eng = S._Engine(merged, paper_pool(), CostModel())
+    run = S._VosRun(eng, curves=curves)
+    run.on_admit(merged)
+    sel = run._selector()
+    sel.push_ready()
+    # sources: one template task x 10 instances, 2 curves -> 2 classes
+    sizes = sorted(len(c.members) for c in sel._classes)
+    assert sizes == [5, 5]
+
+
+# ---------------------------------------------------------------------------
+# API edges
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_value_fn_is_exclusive_with_curves():
+    wl = ds_workload()
+    merged = merge([wl.instance(0)], name="x1")
+    with pytest.raises(ValueError, match="exclusive"):
+        schedule(
+            merged,
+            paper_pool(),
+            CostModel(),
+            policy="vos",
+            value_fn=lambda t, f: 1.0,
+            curves={"0": ValueCurve.step(9.0)},
+        )
+
+
+def test_value_fn_accepts_a_curve_as_default():
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    merged = merge([wl.instance(i) for i in range(4)], name="x4")
+    c = ValueCurve.linear_decay(40.0, 160.0)
+    via_value_fn = schedule(merged, pool, CostModel(), policy="vos", value_fn=c)
+    via_default = schedule(merged, pool, CostModel(), policy="vos", default_curve=c)
+    ref = schedule_reference(merged, pool, CostModel(), policy="vos", default_curve=c)
+    assert _tuples(via_value_fn) == _tuples(via_default) == _tuples(ref)
+
+
+def test_submit_curve_requires_vos_policy():
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    with pytest.raises(ValueError, match="vos"):
+        drv.submit(ds_workload().instance(0), curve=ValueCurve.step(10.0))
+
+
+def test_non_monotone_custom_value_fn_still_rejected():
+    wl = ds_workload()
+    merged = merge([wl.instance(i) for i in range(3)], name="x3")
+    with pytest.raises(ValueError, match="non-decreasing"):
+        schedule(
+            merged, paper_pool(), CostModel(), policy="vos", value_fn=lambda t, f: f
+        )
+
+
+def test_slo_curves_completes_the_durable_record():
+    """Curves attached via submit(curve=...) are policy state: a restart
+    without them silently falls back to the default curve. slo_curves()
+    is the missing half of the durable record — restarting with it
+    reproduces the original run's remaining placements exactly."""
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    mix = slo_mix(8, horizon=90.0)
+    drv = OnlineDriver(pool, cost, policy="vos")
+    for i in range(8):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0, curve=mix[str(i)])
+    for _ in range(40):
+        assert drv.step() is not None
+    record = (
+        [(inst.dag, inst.arrival) for inst in drv.instances],
+        list(drv.eng.assignments),
+        drv.pending_submissions(),
+        drv.slo_curves(),
+    )
+    a = _tuples(drv.run())
+    admitted, history, pend, curves = record
+    drv_b = restart_from_history(
+        pool, cost, "vos", admitted, history, pend, curves=curves
+    )
+    assert _tuples(drv_b.run()) == a
+
+
+def test_add_curve_rejects_instance_id_collision():
+    """Two raw DAGs (no '#idx' suffixes) share the implicit instance id
+    "0"; attaching different curves would silently re-SLO the first — the
+    driver must fail loud instead."""
+    from repro.core.dag import PipelineDAG, Task
+
+    def raw(prefix):
+        g = PipelineDAG(prefix)
+        g.add_task(Task(f"{prefix}_a", "ingest", work=2.0))
+        return g
+
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="vos")
+    drv.submit(raw("x"), curve=ValueCurve.step(50.0))
+    with pytest.raises(ValueError, match="already has a different curve"):
+        drv.submit(raw("y"), curve=ValueCurve.step(90.0))
+    # re-attaching an equal curve is fine (idempotent)
+    drv.submit(raw("z"), curve=ValueCurve.step(50.0))
+
+
+def test_driver_pending_bookkeeping_stays_bounded():
+    """Regression: gate-path admission used to leave every admitted
+    (t, seq, dag) tuple in _pending forever — a continuously fed driver
+    leaked memory linearly in total submissions."""
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(60):
+        drv.submit(wl.instance(i), arrival_t=i * 5.0)
+    drv.run()
+    assert drv.pending == 0
+    assert len(drv._pending) == 0
+    assert len(drv._dead_pending) == 0
+    assert drv.pending_submissions() == []
+
+
+def test_as_value_fn_is_the_slow_path_of_the_same_curve():
+    """The legacy-callable slow path (no grouping, no offset form, no
+    deferral) must schedule identically to the structured fast path for
+    the same curve — the one differential that pins slow against fast."""
+    wl = ds_workload()
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    merged = merge([wl.instance(i) for i in range(5)], name="x5")
+    c = ValueCurve.linear_decay(30.0, 120.0)
+    fast = schedule(merged, pool, CostModel(), policy="vos", default_curve=c)
+    slow = schedule(merged, pool, CostModel(), policy="vos", value_fn=c.as_value_fn())
+    assert _tuples(fast) == _tuples(slow)
