@@ -1,0 +1,218 @@
+"""Failure-recovery benchmark: fail() latency vs a cold re-plan + MTBF sweep.
+
+    PYTHONPATH=src python benchmarks/bench_recovery.py \
+        [--n 1000] [--policies eft,vos] [--period 5.0] \
+        [--mtbfs 50,200,800] [--sweep-n 60] [--out BENCH_sched.json] \
+        [--max-ratio 2.0] [--smoke]
+
+Two experiments on ``ds_workload`` instances streaming onto ``paper_pool``:
+
+  * **recovery latency** (gated) — step two identical drivers ~25% of the
+    way through n instances, then kill two PEs mid-flight on one
+    (``OnlineDriver.fail``: lineage + invalidation + trusted replay +
+    resubmission) and merely shrink the pool on the other
+    (``OnlineDriver.repool`` — the cold elastic re-plan that keeps all
+    placed work). The report's ``wall_seconds`` must stay within
+    ``--max-ratio`` (default 2.0) of the cold re-plan: recovering lost
+    work may not cost materially more than the re-plan it subsumes.
+  * **MTBF sweep** (reported) — drive n instances to completion while
+    killing a rotating PE every ``mtbf`` sim-seconds (the previously
+    killed PE rejoins when its flap quarantine allows). Reported per
+    mtbf: failures survived, goodput (useful exec-seconds over useful +
+    invalidated), lost-work ratio, mean recovery latency and final
+    makespan — the graceful-degradation trajectory as failures get
+    denser.
+
+With ``--out`` pointing at BENCH_sched.json the results are merged into
+that file under a ``"recovery"`` key (other sections stay untouched).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+DEAD = ("xeon2", "arm1")
+ROTATION = ("xeon2", "arm1", "xeon1")
+
+
+def _mk_driver(wl, pool, cost, policy, n, period):
+    from repro.core.online import OnlineDriver
+
+    drv = OnlineDriver(pool, cost, policy=policy)
+    for i in range(n):
+        drv.submit(wl.instance(i), arrival_t=i * period)
+    return drv
+
+
+def bench_latency(n, policies, period, max_ratio):
+    from repro.core.cost_model import CostModel
+    from repro.core.resources import paper_pool
+    from repro.pipeline.workloads import ds_workload
+
+    wl = ds_workload()
+    cost = CostModel()
+    steps = max(len(wl.tasks) * n // 4, 8)
+    results: dict = {}
+    failures: list = []
+    for pol in policies:
+        drv_a = _mk_driver(wl, paper_pool(), cost, pol, n, period)
+        drv_b = _mk_driver(wl, paper_pool(), cost, pol, n, period)
+        for _ in range(steps):
+            drv_a.step()
+            drv_b.step()
+        t_fail = max(a.start for a in drv_a.eng.assignments)
+        rep = drv_a.fail(t_fail, list(DEAD))
+        fail_s = rep.wall_seconds
+        t0 = time.perf_counter()
+        drv_b.repool(drv_b.pool.without(list(DEAD)))
+        repool_s = time.perf_counter() - t0
+        ratio = fail_s / repool_s if repool_s > 0 else float("inf")
+        results[pol] = {
+            "n": n,
+            "placed_at_failure": steps,
+            "fail_seconds": round(fail_s, 4),
+            "repool_seconds": round(repool_s, 4),
+            "ratio": round(ratio, 3),
+            "n_lost": len(rep.lost),
+            "lost_exec_seconds": round(rep.lost_exec_seconds, 2),
+        }
+        # gate only above timer noise (same threshold as bench_online)
+        if repool_s >= 0.05 and ratio > max_ratio:
+            failures.append(
+                f"{pol} n={n}: fail() {fail_s:.3f}s > {max_ratio:g}x "
+                f"cold repool {repool_s:.3f}s")
+        print(f"recovery,{pol}_n{n}_fail_wall,{fail_s:.4f},s  "
+              f"(repool {repool_s:.4f}s, ratio {ratio:.2f}, "
+              f"lost {len(rep.lost)} tasks / "
+              f"{rep.lost_exec_seconds:.0f} exec-s)")
+    return results, failures
+
+
+def bench_mtbf(mtbfs, policy, n, period, max_failures=25):
+    from repro.core.cost_model import CostModel
+    from repro.core.resources import paper_pool
+    from repro.pipeline.workloads import ds_workload
+
+    wl = ds_workload()
+    cost = CostModel()
+    results: dict = {}
+    for mtbf in mtbfs:
+        pool0 = paper_pool()
+        drv = _mk_driver(wl, pool0, cost, policy, n, period)
+        reports = []
+        next_t = float(mtbf)
+        rot = 0
+        high = 0.0
+        while True:
+            a = drv.step()
+            if a is None:
+                if not drv.pending:
+                    break
+                continue
+            if a.start > high:
+                high = a.start
+            if high >= next_t and len(reports) < max_failures:
+                in_pool = {p.name for p in drv.pool.pes}
+                victim = next((pe for pe in ROTATION[rot:] + ROTATION[:rot]
+                               if pe in in_pool), None)
+                if victim is not None:
+                    rot = (ROTATION.index(victim) + 1) % len(ROTATION)
+                    reports.append(drv.fail(next_t, [victim]))
+                    # returning capacity: everything past its quarantine
+                    # (never the victim — its window just opened)
+                    drv.rejoin(next_t, pool0)
+                next_t += mtbf
+        sched = drv.schedule()
+        useful = sum(x.finish - x.start - x.comm_wait
+                     for x in sched.assignments)
+        lost = sum(r.lost_exec_seconds for r in reports)
+        mean_lat = (sum(r.wall_seconds for r in reports) / len(reports)
+                    if reports else 0.0)
+        makespan = max((x.finish for x in sched.assignments), default=0.0)
+        results[str(mtbf)] = {
+            "policy": policy,
+            "n": n,
+            "n_failures": len(reports),
+            "goodput": round(useful / (useful + lost), 4) if useful else 0.0,
+            "lost_work_ratio": round(lost / (useful + lost), 4)
+            if useful else 0.0,
+            "mean_recovery_ms": round(mean_lat * 1e3, 2),
+            "makespan": round(makespan, 2),
+            "cancelled": len(drv.cancelled_instances),
+        }
+        print(f"recovery,mtbf{mtbf}_{policy}_n{n},"
+              f"{results[str(mtbf)]['goodput']:.4f},goodput  "
+              f"({len(reports)} failures, lost ratio "
+              f"{results[str(mtbf)]['lost_work_ratio']:.4f}, "
+              f"{results[str(mtbf)]['mean_recovery_ms']:.1f}ms/recovery)")
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: latency at n=100 (eft+vos), sweep at "
+                         "n=16 over mtbf 20,60; no file write unless "
+                         "--out given explicitly")
+    ap.add_argument("--n", type=int, default=1000,
+                    help="instances for the latency experiment")
+    ap.add_argument("--policies", default="eft,vos")
+    ap.add_argument("--period", type=float, default=5.0)
+    ap.add_argument("--mtbfs", default="50,200,800",
+                    help="sim-seconds between injected PE deaths")
+    ap.add_argument("--sweep-n", type=int, default=60,
+                    help="instances for the MTBF sweep")
+    ap.add_argument("--sweep-policy", default="eft")
+    ap.add_argument("--out", default=None,
+                    help="merge results under a 'recovery' key of this "
+                         "JSON (typically BENCH_sched.json)")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail if fail() wall time exceeds this multiple "
+                         "of a cold repool re-plan at the same point")
+    args = ap.parse_args(argv)
+    n = 100 if args.smoke else args.n
+    sweep_n = 16 if args.smoke else args.sweep_n
+    mtbfs = [20.0, 60.0] if args.smoke else [
+        float(s) for s in args.mtbfs.split(",")]
+    policies = ["eft", "vos"] if args.smoke else args.policies.split(",")
+    t0 = time.perf_counter()
+    latency, failures = bench_latency(n, policies, args.period,
+                                      args.max_ratio)
+    sweep = bench_mtbf(mtbfs, args.sweep_policy, sweep_n, args.period)
+    if args.out:
+        payload = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                payload = json.load(f)
+        payload["recovery"] = {
+            "meta": {
+                "workload": "ds_workload x n on paper_pool, streamed via "
+                            "OnlineDriver with injected PE deaths",
+                "latency": "fail() wall (lineage+invalidate+replay+"
+                           "resubmit) vs cold repool re-plan at the same "
+                           "mid-flight point",
+                "sweep": "PE death every mtbf sim-seconds, rotating "
+                         "victim, quarantine-gated rejoin",
+                "period": args.period,
+                "total_seconds": round(time.perf_counter() - t0, 1),
+            },
+            "latency": latency,
+            "mtbf_sweep": sweep,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,8 @@ from repro.core.schedulers import (POLICIES, SCHEDULERS, Assignment,
                                    OnlineEngine, Schedule, schedule)
 from repro.core.online import (OnlineDriver, OnlineRunResult,
                                restart_from_history, run_online)
+from repro.core.recovery import (PEBackoff, RecoveryReport, RetryState,
+                                 TaskRecord, compute_lost)
 from repro.core.vos import (ValueCurve, VoSSpec, instance_curves, slo_mix,
                             system_vos, uniform_specs)
 from repro.core import simulator
@@ -27,6 +29,7 @@ __all__ = [
     "POLICIES", "SCHEDULERS", "Assignment", "OnlineEngine", "Schedule",
     "schedule",
     "OnlineDriver", "OnlineRunResult", "restart_from_history", "run_online",
+    "PEBackoff", "RecoveryReport", "RetryState", "TaskRecord", "compute_lost",
     "ValueCurve", "VoSSpec", "instance_curves", "slo_mix",
     "system_vos", "uniform_specs", "simulator",
 ]

@@ -23,7 +23,7 @@ pure for property testing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,9 +72,13 @@ class HealthMonitor:
 
     def __init__(self, workers: Sequence[str], alpha: float = 0.3,
                  threshold: float = 1.5, patience: int = 3,
-                 heartbeat_timeout: float = 60.0) -> None:
+                 heartbeat_timeout: float = 60.0, now: float = 0.0) -> None:
+        # joining counts as a heartbeat: a worker that never reported gets
+        # its grace period from ``now`` (the monitor's start time), not
+        # from t=0 — otherwise any monitor started at now > timeout flags
+        # every quiet worker dead on the first sweep
         self.health: Dict[str, WorkerHealth] = {
-            w: WorkerHealth(w) for w in workers}
+            w: WorkerHealth(w, last_heartbeat=now) for w in workers}
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
@@ -121,19 +125,53 @@ class HealthMonitor:
         return [w for w, h in self.health.items()
                 if h.alive and now - h.last_heartbeat > self.heartbeat_timeout]
 
+    def sweep_dead(self, now: float) -> List[str]:
+        """Convict heartbeat-dead workers: :meth:`dead` + :meth:`mark_dead`
+        in one step, returning the newly convicted names. Callers that
+        only consulted :meth:`healthy` (``prune_pool``) used to miss
+        workers that timed out but were never explicitly ``mark_dead``-ed;
+        sweeping first closes that gap."""
+        out = self.dead(now)
+        for w in out:
+            self.mark_dead(w)
+        return out
+
     def mark_dead(self, worker: str) -> None:
         self.health[worker].alive = False
+        # stale strikes must not survive exclusion: a worker rotated out
+        # as a straggler would otherwise be re-convicted instantly on
+        # rejoin, before a single fresh observation
+        self._strikes[worker] = 0
+
+    def mark_alive(self, worker: str, now: Optional[float] = None) -> None:
+        """Proper rejoin: revive the worker with a clean slate — no stale
+        strikes, EWMA restarted from the next observation, and (when
+        ``now`` is given) a fresh heartbeat so the rejoin is not instantly
+        swept dead again."""
+        h = self.health[worker]
+        h.alive = True
+        h.steps = 0
+        h.ewma_step_s = 0.0
+        if now is not None:
+            h.last_heartbeat = now
+        self._strikes[worker] = 0
 
     def healthy(self) -> List[str]:
         return [w for w, h in self.health.items() if h.alive]
 
 
 def prune_pool(pool, monitor: "HealthMonitor",
-               also_drop: Sequence[str] = ()):
+               also_drop: Sequence[str] = (),
+               now: Optional[float] = None):
     """Scheduler-side mitigation: the surviving :class:`ResourcePool` after
     dropping the monitor's dead workers (worker ids are PE names) plus any
     explicitly named PEs — typically ``monitor.stragglers()``, so slow
     workers can be rotated out before they miss heartbeats.
+
+    Pass ``now`` to sweep heartbeat-dead workers first
+    (:meth:`HealthMonitor.sweep_dead`) — without the sweep, workers that
+    timed out but were never explicitly ``mark_dead``-ed still count as
+    healthy and survive the prune.
 
     Feed the result to ``OnlineDriver.repool`` (repro.core.online) so the
     live scheduling engine re-plans onto the surviving PEs without a full
@@ -142,6 +180,8 @@ def prune_pool(pool, monitor: "HealthMonitor",
     that is *workload*-scoped (placed history by location, per-instance
     VoS value curves) survives the re-plan; only pool-derived state is
     re-keyed."""
+    if now is not None:
+        monitor.sweep_dead(now)
     healthy = set(monitor.healthy()) - set(also_drop)
     return pool.subset(p.name for p in pool.pes if p.name in healthy)
 

@@ -42,6 +42,16 @@ class ExecutionReport:
     runs: List[TaskRun]
     outputs: Dict[str, Any]
     wall_seconds: float
+    #: outputs that were computed but whose every copy sat on a PE that
+    #: died (lineage loss — must be recomputed; see Executor.execute)
+    lost: List[str] = dataclasses.field(default_factory=list)
+    #: tasks not executed: assigned PE dead, or an input output was lost
+    skipped: List[str] = dataclasses.field(default_factory=list)
+    #: PE names dead at the end of the run
+    dead: List[str] = dataclasses.field(default_factory=list)
+    #: task name -> PE names holding a live copy of its output (producer
+    #: plus every consumer that executed — the Spark-style fetch copies)
+    copies: Dict[str, set] = dataclasses.field(default_factory=dict)
 
     def run(self, task: str) -> TaskRun:
         for r in self.runs:
@@ -55,6 +65,10 @@ class ExecutionReport:
         for r in self.runs:
             out[r.backend] = out.get(r.backend, 0) + 1
         return out
+
+    def complete(self, dag: PipelineDAG) -> bool:
+        """True iff every task of ``dag`` has a live output."""
+        return all(t.name in self.outputs for t in dag.tasks)
 
 
 class Executor:
@@ -85,7 +99,23 @@ class Executor:
         raise ValueError(f"task {task.name!r} has no executable backends")
 
     def execute(self, dag: PipelineDAG, schedule: Schedule,
-                inputs: Optional[Mapping[str, Any]] = None) -> ExecutionReport:
+                inputs: Optional[Mapping[str, Any]] = None, *,
+                injector=None,
+                resume_from: Optional[ExecutionReport] = None
+                ) -> ExecutionReport:
+        """Execute ``schedule`` with real backends.
+
+        ``injector`` (a :class:`repro.train.fault_tolerance.FailureInjector`;
+        event steps index the execution order) injects failures as the run
+        progresses: a ``"die"`` event kills the named PE — tasks assigned
+        to it are skipped, and every output whose only live copies sat on
+        it is dropped (lineage loss; a consumer that already executed
+        holds a fetched copy, so those survive). ``"slow"`` scales the
+        worker's measured seconds, ``"rejoin"`` revives it (its lost data
+        stays lost). ``resume_from`` continues from a previous (failed)
+        report: surviving outputs and copy sets are carried over and only
+        missing work runs — executed recovery, validated against the
+        simulated recovery path in tests/test_recovery.py."""
         inputs = dict(inputs or {})
         # tie-break equal start times by topological order, not name: a
         # zero-duration predecessor can share its successor's start time,
@@ -93,12 +123,42 @@ class Executor:
         topo_pos = {t.name: i for i, t in enumerate(dag.topological_order())}
         order = sorted(schedule.assignments,
                        key=lambda a: (a.start, topo_pos[a.task]))
-        outputs: Dict[str, Any] = {}
+        outputs: Dict[str, Any] = (dict(resume_from.outputs)
+                                   if resume_from else {})
+        copies: Dict[str, set] = (
+            {nm: set(cs) for nm, cs in resume_from.copies.items()}
+            if resume_from else {})
+        dead: set = set(resume_from.dead) if resume_from else set()
+        slow: Dict[str, float] = {}
         runs: List[TaskRun] = []
+        lost: List[str] = []
+        skipped: List[str] = []
         t_all = time.perf_counter()
-        for a in order:
+        for step, a in enumerate(order):
+            if injector is not None:
+                for ev in injector.at(step):
+                    if ev.kind == "die":
+                        dead.add(ev.worker)
+                        slow.pop(ev.worker, None)
+                        # the PE's copies die with it; an output with no
+                        # copy left anywhere is lost (lineage recompute)
+                        for nm, cs in copies.items():
+                            cs.discard(ev.worker)
+                            if not cs and nm in outputs:
+                                del outputs[nm]
+                                lost.append(nm)
+                    elif ev.kind == "slow":
+                        slow[ev.worker] = ev.factor
+                    elif ev.kind == "rejoin":
+                        dead.discard(ev.worker)
+                        slow.pop(ev.worker, None)
+            if resume_from is not None and a.task in outputs:
+                continue  # computed before the failure; its copy survived
             task = dag.task(a.task)
             preds = dag.predecessors(task.name)
+            if a.pe in dead or any(p.name not in outputs for p in preds):
+                skipped.append(task.name)
+                continue
             args = [outputs[p.name] for p in preds]
             if task.name in inputs:
                 args = [inputs[task.name]] + args
@@ -106,13 +166,18 @@ class Executor:
             t0 = time.perf_counter()
             out = fn(*args, **task.params)
             out = _block(out)
-            dt = time.perf_counter() - t0
+            dt = (time.perf_counter() - t0) * slow.get(a.pe, 1.0)
             outputs[task.name] = out
+            copies[task.name] = {a.pe}
+            for p in preds:
+                # consumer keeps a fetched copy of each input
+                copies.setdefault(p.name, set()).add(a.pe)
             runs.append(TaskRun(task.name, task.op, a.pe, kind, dt, out))
             if self.learn_into is not None:
                 self.learn_into.observe(task, self.pool.pe(a.pe), dt)
-        return ExecutionReport(runs, outputs,
-                               time.perf_counter() - t_all)
+        return ExecutionReport(runs, outputs, time.perf_counter() - t_all,
+                               lost=lost, skipped=skipped,
+                               dead=sorted(dead), copies=copies)
 
 
 def _block(x: Any) -> Any:

@@ -62,10 +62,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG
+from repro.core.recovery import (PEBackoff, RecoveryReport, RetryState,
+                                 TaskRecord, compute_lost, lost_exec_seconds)
 from repro.core.resources import ResourcePool
 from repro.core.schedulers import (Assignment, OnlineEngine, Schedule,
                                    make_policy_run)
@@ -84,6 +86,8 @@ class InstanceState:
     remaining: int = 0
     finish: float = 0.0
     completed: bool = False
+    #: withdrawn after a task exhausted its retry budget (never completes)
+    cancelled: bool = False
 
 
 @dataclasses.dataclass
@@ -98,6 +102,15 @@ class OnlineRunResult(RunResult):
     #: (instance name, completion time) in completion order
     completions: List[Tuple[str, float]] = dataclasses.field(
         default_factory=list)
+    #: failure events recovered from (:meth:`OnlineDriver.fail` calls)
+    n_failures: int = 0
+    #: placed tasks invalidated across all failures (lineage recompute)
+    n_lost_tasks: int = 0
+    #: execution-seconds of invalidated work actually burnt
+    lost_exec_seconds: float = 0.0
+    #: instance names cancelled (retry budget) or shed (capacity loss)
+    cancelled: List[str] = dataclasses.field(default_factory=list)
+    shed: List[str] = dataclasses.field(default_factory=list)
 
 
 class OnlineDriver:
@@ -148,6 +161,24 @@ class OnlineDriver:
         self.n_events = 0
         self.max_live = 0
         self._live = 0
+        # -- failure semantics (see repro.core.recovery) ---------------------
+        #: per-task retry budget/backoff — replace before the first failure
+        #: to tune (e.g. ``drv.retry = RetryState(budget=5, backoff_base=2)``)
+        self.retry = RetryState()
+        #: flap quarantine against PEs that keep dying
+        self.pe_backoff = PEBackoff()
+        #: PE name -> location, for every PE ever pooled — lets survivors
+        #: placed on since-dead PEs replay (their outputs stay at the
+        #: location; see OnlineEngine.replay)
+        self._loc_of: Dict[str, str] = {p.name: p.location for p in pool.pes}
+        #: durable recovery record: one report per fail() event, cumulative
+        #: max-merged resubmission floors, cancelled/shed instance names —
+        #: with the surviving history this is what restart_from_history
+        #: needs to rebuild an equivalent driver after failures
+        self.recoveries: List[RecoveryReport] = []
+        self.retry_floors: Dict[str, float] = {}
+        self.cancelled_instances: List[str] = []
+        self.shed_instances: List[str] = []
 
     # -- submission / admission ----------------------------------------------
     def submit(self, dag: PipelineDAG, arrival_t: float = 0.0,
@@ -326,9 +357,242 @@ class OnlineDriver:
         because a pool-*derived* VoS default curve is re-derived from the
         survivors on rebind."""
         self.pool = new_pool
+        for p in new_pool.pes:
+            self._loc_of[p.name] = p.location
         self.eng.repool(new_pool)
         self.policy.rebind()
         self._gate = None
+
+    # -- failure recovery -----------------------------------------------------
+    def fail(self, t: float, pes: Sequence[str] = (),
+             links: Sequence[Tuple[str, str]] = (),
+             shed: object = 0) -> RecoveryReport:
+        """Recover from a failure at time ``t``: the named PEs die and the
+        named ``(src_loc, dst_loc)`` links drop their in-flight transfers
+        (transient — the link itself recovers; its victims' inputs do not).
+
+        Work completed on surviving PEs is kept. In-flight and future work
+        on dead PEs is invalidated, as are completed tasks whose only live
+        output copy sat on a dead PE (lineage recompute — see
+        :func:`repro.core.recovery.compute_lost`) and tasks whose inputs
+        rode a dead link mid-transfer. The lost subgraph is resubmitted
+        with per-task retry budgets and exponential-backoff arrival floors
+        (:class:`repro.core.recovery.RetryState`); a task over budget
+        cancels its whole instance. ``shed`` pending instances are dropped
+        lowest-value first (``shed="auto"``: proportional to the capacity
+        lost). Dead PEs are quarantined against flapping rejoins
+        (:class:`repro.core.recovery.PEBackoff`).
+
+        After the call, continuing this driver is byte-identical to
+        :func:`restart_from_history` on the surviving pool with the
+        surviving history, cumulative ``retry_floors`` and ``cancelled``
+        instances — the recovery differential, pinned for all 7 policies
+        in tests/test_recovery.py."""
+        t = float(t)
+        t0 = time.perf_counter()
+        eng = self.eng
+        di = eng._di
+        id_of = di.id_of
+        names = di.names
+        dead = tuple(dict.fromkeys(pes))
+        dead_set = set(dead)
+        dead_links = tuple((str(s), str(d)) for s, d in links)
+        for pe in dead:
+            self.pe_backoff.record_failure(pe, t)
+        # lineage pass over the placement record
+        records = {a.task: TaskRecord(a.pe, a.start, a.start + a.comm_wait,
+                                      a.finish)
+                   for a in eng.assignments}
+        victims = self._link_victims(t, set(dead_links))
+        cancelled_names = {names[tid] for tid in eng._cancelled}
+        lost = compute_lost(
+            records,
+            lambda nm: [names[s] for s in di.succs[id_of[nm]]],
+            lambda nm: [names[p] for p in di.preds[id_of[nm]]],
+            dead_set, t, extra_lost=victims, cancelled=cancelled_names)
+        lost_secs = lost_exec_seconds(records, lost, t)
+        # retry accounting: charge every lost task one attempt
+        floors, exhausted = self.retry.charge(lost, t)
+        for nm, fl in floors.items():
+            if fl > self.retry_floors.get(nm, float("-inf")):
+                self.retry_floors[nm] = fl
+        newly_cancelled: List[str] = []
+        for nm in exhausted:
+            inst = self.instances[self._inst_of[id_of[nm]]]
+            if not inst.cancelled:
+                inst.cancelled = True
+                newly_cancelled.append(inst.name)
+                self.cancelled_instances.append(inst.name)
+        # shrink the pool, then rebuild live state around the survivors
+        pool_names = {p.name for p in self.pool.pes}
+        dead_in_pool = [p for p in dead if p in pool_names]
+        n_before = len(self.pool.pes)
+        if dead_in_pool:
+            self.pool = self.pool.without(dead_in_pool)
+            eng.repool(self.pool)
+        if lost or newly_cancelled:
+            survivors = eng.invalidate([id_of[nm] for nm in lost],
+                                       arrival_floors=floors,
+                                       loc_of=self._loc_of)
+            fin = eng._finish
+            for inst in self.instances:
+                if inst.cancelled:
+                    eng.cancel([tid for tid in range(
+                        inst.first_tid, inst.first_tid + inst.n_tasks)
+                        if fin[tid] is None])
+            self._resync_instances()
+        else:
+            survivors = eng.assignments
+        if dead_in_pool or lost or newly_cancelled:
+            # only rebind when engine state actually changed: repool and
+            # invalidate both re-mark _newly for the fresh selector, but a
+            # no-op failure (nothing lost, no pooled PE died) did neither —
+            # rebinding then would strand the already-advertised ready set
+            self.policy.rebind()
+            self._gate = None
+        if shed == "auto":
+            k = (-(-self._n_pending * len(dead_in_pool) // n_before)
+                 if dead_in_pool and n_before else 0)
+        else:
+            k = int(shed)  # type: ignore[call-overload]
+        shed_names = [dag.name for dag, _t in self.shed_pending(k)]
+        report = RecoveryReport(
+            t=t, dead_pes=dead, dead_links=dead_links, lost=tuple(lost),
+            survivors=len(survivors), retry_floors=floors,
+            cancelled=tuple(newly_cancelled), shed=tuple(shed_names),
+            lost_exec_seconds=lost_secs,
+            wall_seconds=time.perf_counter() - t0)
+        self.recoveries.append(report)
+        return report
+
+    def _link_victims(self, t: float, dead_links: set) -> set:
+        """Placed tasks whose input transfers were mid-flight on a dead
+        link at ``t`` (held but not yet executing, plan routes over the
+        link) — they never receive their inputs and must re-plan."""
+        if not dead_links:
+            return set()
+        eng = self.eng
+        id_of = eng._di.id_of
+        victims = set()
+        for a in eng.assignments:
+            if a.start <= t < a.start + a.comm_wait:
+                tid = id_of[a.task]
+                loc = eng._placed_loc[tid]
+                try:
+                    plan = eng._plan(tid, loc)
+                except KeyError:
+                    continue
+                if any(lk in dead_links for lk, _d in plan):
+                    victims.add(a.task)
+        return victims
+
+    def _resync_instances(self) -> None:
+        """Rebuild instance book-keeping from the engine's finish array
+        after an invalidation — un-retires instances whose placed work was
+        lost, re-retires the still-complete ones, and rebuilds the
+        completion record in (time, name) order (the order a restarted
+        driver derives; retirement order is not in the durable record)."""
+        finish = self.eng._finish
+        self.completions = []
+        live = 0
+        for inst in self.instances:
+            fins = [f for f in
+                    finish[inst.first_tid:inst.first_tid + inst.n_tasks]
+                    if f is not None]
+            inst.finish = max(fins, default=0.0)
+            if inst.cancelled:
+                inst.remaining = 0
+                inst.completed = False
+                continue
+            inst.remaining = inst.n_tasks - len(fins)
+            inst.completed = inst.remaining == 0 and inst.n_tasks > 0
+            if inst.n_tasks == 0:  # degenerate empty instance
+                inst.completed = True
+            if inst.completed:
+                self.completions.append((inst.name, inst.finish))
+                self._retire(inst)
+            elif inst.n_tasks > 0:
+                live += 1
+        self.completions.sort(key=lambda c: (c[1], c[0]))
+        self._live = live
+        if live > self.max_live:
+            self.max_live = live
+
+    def shed_pending(self, k: int) -> List[Tuple[PipelineDAG, float]]:
+        """Shed the ``k`` pending (unadmitted) instances with the largest
+        policy arrival floor — under VoS that is the lowest-value SLO
+        curve; for every other policy the floor is the arrival time, so
+        the latest arrivals go first. Graceful degradation under capacity
+        loss: load is dropped before it can starve higher-value admitted
+        work. Returns the shed (dag, arrival) pairs, first-shed first."""
+        if k <= 0 or not self._n_pending:
+            return []
+        pol = self.policy
+        live = [(t, seq, dag) for (t, seq, dag) in self._pending
+                if seq not in self._dead_pending]
+        live.sort(key=lambda e: (pol.arrival_floor(e[0], e[2]), e[0], e[1]),
+                  reverse=True)
+        out: List[Tuple[PipelineDAG, float]] = []
+        for t, seq, dag in live[:k]:
+            self._dead_pending.add(seq)
+            if self._gate is not None:
+                self._dead_gate.add(seq)
+            self._n_pending -= 1
+            self.shed_instances.append(dag.name)
+            out.append((dag, t))
+        self._drain_pending()
+        return out
+
+    def rejoin(self, t: float, fragment: ResourcePool
+               ) -> Tuple[List[str], List[str]]:
+        """Re-admit returning PEs at time ``t``. ``fragment`` carries the
+        PEs (and any links they bring); PEs still inside their flap
+        quarantine window (:class:`repro.core.recovery.PEBackoff`) are
+        refused. Returns ``(accepted, refused)`` PE names; the pool grows
+        (one repool) iff any PE was accepted."""
+        t = float(t)
+        in_pool = {p.name for p in self.pool.pes}
+        accepted: List[str] = []
+        refused: List[str] = []
+        for p in fragment.pes:
+            if p.name in in_pool:
+                continue
+            if self.pe_backoff.quarantined(p.name, t):
+                refused.append(p.name)
+            else:
+                accepted.append(p.name)
+        if accepted:
+            keep = set(accepted)
+            add = ResourcePool([p for p in fragment.pes if p.name in keep],
+                               list(fragment._links.values()),
+                               fragment.intra_location_bandwidth)
+            self.repool(self.pool.union(add))
+        return accepted, refused
+
+    def apply_health(self, monitor, now: float) -> Optional[RecoveryReport]:
+        """End-to-end :class:`repro.core.elastic.HealthMonitor` wiring.
+
+        Heartbeat-dead workers (``sweep_dead``) take the lost-work path —
+        their in-flight placements and orphaned outputs are invalidated
+        and resubmitted via :meth:`fail`. Convicted stragglers are a
+        *transient* slow-down: they are excluded from the pool
+        (``mark_dead`` — they may rejoin later) and rotated out with a
+        plain :meth:`repool` via ``elastic.prune_pool``; their completed
+        work is kept and nothing is recomputed. Returns the
+        :class:`RecoveryReport` when a PE died, else None."""
+        from repro.core.elastic import prune_pool
+        dead = monitor.sweep_dead(now)
+        stragglers = monitor.stragglers()
+        for w in stragglers:
+            monitor.mark_dead(w)  # excluded (can rejoin later)
+        pool_names = {p.name for p in self.pool.pes}
+        report = None
+        dead_in = [w for w in dead if w in pool_names]
+        if dead_in:
+            report = self.fail(now, dead_in)
+        if any(w in {p.name for p in self.pool.pes} for w in stragglers):
+            self.repool(prune_pool(self.pool, monitor))
+        return report
 
     # -- results --------------------------------------------------------------
     def schedule(self) -> Schedule:
@@ -342,7 +606,13 @@ class OnlineDriver:
             sched.makespan, sched.mean_utilization, sched.total_energy,
             sched.location_split(), sched, wall_seconds=wall_seconds,
             n_events=self.n_events, max_live=self.max_live,
-            completions=list(self.completions))
+            completions=list(self.completions),
+            n_failures=len(self.recoveries),
+            n_lost_tasks=sum(len(r.lost) for r in self.recoveries),
+            lost_exec_seconds=sum(r.lost_exec_seconds
+                                  for r in self.recoveries),
+            cancelled=list(self.cancelled_instances),
+            shed=list(self.shed_instances))
 
 
 def run_online(workload: PipelineDAG, pool: ResourcePool,
@@ -368,6 +638,8 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
                          history: Sequence[Assignment],
                          pending: Sequence[Tuple[PipelineDAG, float]] = (),
                          loc_of: Optional[Mapping[str, str]] = None,
+                         retry_floors: Optional[Mapping[str, float]] = None,
+                         cancelled: Sequence[str] = (),
                          **policy_kw) -> OnlineDriver:
     """Rebuild a live driver on ``pool`` from the durable record — the
     restart-from-scratch dual of :meth:`OnlineDriver.repool`.
@@ -386,19 +658,53 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
     the returned driver must produce the same remaining placements as the
     repooled original — differentially tested in tests/test_online.py and
     tests/test_vos_curves.py.
+
+    After failures the durable record additionally carries
+    ``retry_floors`` (:attr:`OnlineDriver.retry_floors` — cumulative
+    resubmission arrival floors from retry backoff) and ``cancelled``
+    (:attr:`OnlineDriver.cancelled_instances` — instances withdrawn after
+    a task exhausted its retry budget); ``history`` is then the
+    *surviving* assignment record :meth:`OnlineDriver.fail` left behind.
+    Continuing the rebuilt driver is byte-identical to continuing the
+    failed one — the recovery differential in tests/test_recovery.py.
     """
     drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
     for dag, t in admitted:
         drv._admit_now(dag, t)
-    drv.eng.replay(history, loc_of)
+    eng = drv.eng
+    if retry_floors:
+        id_of = eng._di.id_of
+        for nm, fl in retry_floors.items():
+            eng.raise_arrival(id_of[nm], fl)
+        drv.retry_floors = dict(retry_floors)
+    cancelled_set = set(cancelled)
+    if cancelled_set:
+        in_history = {a.task for a in history}
+        names = eng._di.names
+        for inst in drv.instances:
+            if inst.name in cancelled_set:
+                inst.cancelled = True
+                drv.cancelled_instances.append(inst.name)
+                eng.cancel([tid for tid in range(
+                    inst.first_tid, inst.first_tid + inst.n_tasks)
+                    if names[tid] not in in_history])
+    # trust the recorded times: a post-failure history is gapped (lost
+    # tasks' transfer bookings are vacated), so strict recompute-replay
+    # would legitimately diverge; for complete histories trusted booking
+    # is float-identical to the strict path (see OnlineEngine.replay)
+    drv.eng.replay(history, loc_of, trust=True)
     drv.n_events = len(history)
     # sync instance book-keeping with the replayed placements
     finish = drv.eng._finish
     for inst in drv.instances:
         fins = [f for f in finish[inst.first_tid:inst.first_tid + inst.n_tasks]
                 if f is not None]
-        inst.remaining = inst.n_tasks - len(fins)
         inst.finish = max(fins, default=0.0)
+        if inst.cancelled:
+            inst.remaining = 0
+            drv._live -= 1
+            continue
+        inst.remaining = inst.n_tasks - len(fins)
         if inst.remaining == 0 and not inst.completed:
             inst.completed = True
             drv._live -= 1

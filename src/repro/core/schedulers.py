@@ -363,6 +363,10 @@ class _Engine:
         #: (dense rows; an entry is buildable once all preds are placed)
         self._plans: Dict[str, List[Optional[Tuple]]] = {}
         self._newly: List[int] = []
+        #: tids withdrawn from the problem (retry budget exhausted) — never
+        #: ready, never placed; ``done()`` ignores them because they are
+        #: kept out of ``_ready`` (see :meth:`cancel`)
+        self._cancelled: set = set()
         for tid in di.topo:
             if self._n_preds_left[tid] == 0:
                 self._ready[tid] = None
@@ -630,9 +634,13 @@ class _Engine:
         npl = self._n_preds_left
         ready = self._ready
         newly = self._newly
+        placed_loc = self._placed_loc
         for s in self._di.succs[tid]:
             npl[s] -= 1
-            if npl[s] == 0:
+            if npl[s] == 0 and placed_loc[s] is None:
+                # the placed check keeps recomputed producers from
+                # re-readying an orphan survivor (a consumer replayed
+                # ahead of its lost pred — see _replay_trusted)
                 ready[s] = None
                 newly.append(s)
         return a
@@ -643,6 +651,46 @@ class _Engine:
         out = self._newly
         self._newly = []
         return out
+
+    # -- withdrawal (failure recovery) ----------------------------------------
+    def raise_arrival(self, tid: int, floor: float) -> None:
+        """Raise a task's arrival floor (resubmission backoff after a
+        failure — the task may not start before ``floor``). Callers must
+        not have advertised the task's candidates yet at the old floor
+        (the recovery paths apply floors before any selector sees the
+        task: :meth:`OnlineEngine.invalidate` is followed by a policy
+        rebind, and restart applies them before the first step)."""
+        if floor > self._arr[tid]:
+            self._arr[tid] = floor
+            r = self._ready_at[tid]
+            if r is not None and floor > r:
+                self._ready_at[tid] = floor
+
+    def cancel(self, tids: Sequence[int]) -> None:
+        """Withdraw unplaced tasks from the problem permanently (retry
+        budget exhausted — the online driver cancels whole instances).
+        Cancelled tasks never enter the ready set again; placed work
+        cannot be cancelled (invalidate it first)."""
+        cancelled = self._cancelled
+        for tid in tids:
+            if self._finish[tid] is not None:
+                raise ValueError(
+                    f"cannot cancel placed task {self._di.names[tid]!r}")
+            cancelled.add(tid)
+        self._drop_cancelled()
+
+    def _drop_cancelled(self) -> None:
+        """Remove cancelled tids from the ready structures (deletion keeps
+        the remaining insertion order — the same order an engine that never
+        saw them would carry)."""
+        cancelled = self._cancelled
+        if not cancelled:
+            return
+        ready = self._ready
+        for tid in [t for t in ready if t in cancelled]:
+            del ready[tid]
+        if self._newly:
+            self._newly = [t for t in self._newly if t not in cancelled]
 
     # -- name/object-based API (compatibility + HEFT/tests) -------------------
     def ready_at(self, task: Task) -> float:
@@ -1542,9 +1590,73 @@ class OnlineEngine(_Engine):
                 self._energy_row_ids = row_ids(En, self._erow_seen)
         self._newly = list(self._ready)
 
+    # -- failure recovery -----------------------------------------------------
+    def invalidate(self, lost: Sequence[int],
+                   arrival_floors: Optional[Mapping[str, float]] = None,
+                   loc_of: Optional[Mapping[str, str]] = None
+                   ) -> List[Assignment]:
+        """Un-place the ``lost`` tasks and rebuild live scheduler state
+        around the surviving history — the in-place core of
+        :meth:`repro.core.online.OnlineDriver.fail`.
+
+        The grown index, cost tables and row-identity registries are all
+        untouched (no full index rebuild — they are placement-independent);
+        only the mutable placement state is reset in place and the
+        surviving assignment record replayed, which is exactly the state a
+        restarted engine (admit everything + :meth:`replay` on the
+        survivors) would carry — the recovery differential in
+        tests/test_recovery.py pins the two against each other.
+
+        ``arrival_floors`` raises lost tasks' arrival floors (retry
+        backoff: recomputation may not be scheduled before the failure it
+        recovers from). ``loc_of`` maps PE names absent from the current
+        pool to their location so survivors placed on since-removed PEs
+        replay (see :meth:`replay`). Mutates closure-captured structures
+        in place, but callers must still rebind the policy run afterwards
+        (:meth:`_PolicyRun.rebind`) — selector caches hold stale
+        candidates. Returns the surviving assignments (the new durable
+        history, in original placement order)."""
+        di = self._di
+        id_of = di.id_of
+        lost_set = set(lost)
+        survivors = [a for a in self.assignments
+                     if id_of[a.task] not in lost_set]
+        if arrival_floors:
+            for nm, fl in arrival_floors.items():
+                self.raise_arrival(id_of[nm], fl)
+        # full in-place reset of mutable placement state
+        n = len(di.names)
+        self._pe_free[:] = [0.0] * self.n_pes
+        self.link_free.clear()
+        for row in self._plans.values():
+            row[:] = [None] * n
+        self.dirty = DirtyHorizons(self._pi)
+        self.assignments = []
+        self._finish[:] = [None] * n
+        self._placed[:] = [None] * n
+        self._placed_loc[:] = [None] * n
+        self._ready_at[:] = [None] * n
+        self._n_preds_left[:] = [len(p) for p in di.preds]
+        ready = self._ready
+        ready.clear()
+        ready_at = self._ready_at
+        arr = self._arr
+        npl = self._n_preds_left
+        cancelled = self._cancelled
+        newly = []
+        for tid in di.topo:
+            if npl[tid] == 0 and tid not in cancelled:
+                ready[tid] = None
+                ready_at[tid] = arr[tid]
+                newly.append(tid)
+        self._newly = newly
+        self.replay(survivors, loc_of, trust=True)
+        return survivors
+
     # -- restart-from-history -------------------------------------------------
     def replay(self, assignments: Sequence[Assignment],
-               loc_of: Optional[Mapping[str, str]] = None) -> None:
+               loc_of: Optional[Mapping[str, str]] = None,
+               trust: bool = False) -> None:
         """Re-apply a placement history (in its original order) to rebuild
         scheduler state on this engine — the recovery path: a fresh engine
         plus the durable assignment record reconstructs exactly the live
@@ -1557,12 +1669,26 @@ class OnlineEngine(_Engine):
         needs ``loc_of[pe_name]`` to recover the location its outputs live
         at, trusts the recorded times, and re-books its input transfers on
         surviving links. Assumes link parameters of surviving locations are
-        unchanged from when the history was recorded."""
+        unchanged from when the history was recorded.
+
+        ``trust=True`` extends the trusted treatment to in-pool PEs:
+        transfers are still booked FIFO at the recorded holds, but the
+        recorded finish is kept instead of re-derived and checked. For a
+        *complete* history the two are float-identical (the strict path
+        verifies exactly that); for a *gapped* history — a failure
+        invalidated tasks whose transfers interleaved with survivors' —
+        recomputation would legitimately come out earlier (the vacated
+        bookings free link capacity), while the survivors' recorded times
+        are facts: that work already ran. Recovery paths
+        (:meth:`invalidate`, restart after ``fail``) therefore trust."""
         idx_of = self._pi.idx_of
         for a in assignments:
             tid = self._di.id_of[a.task]
             pj = idx_of.get(a.pe)
             if pj is not None:
+                if trust:
+                    self._replay_trusted(tid, a, pj)
+                    continue
                 got = self._place_i(tid, pj, start=a.start)
                 if got.finish != a.finish:
                     raise ValueError(
@@ -1575,6 +1701,9 @@ class OnlineEngine(_Engine):
                         f"its location to replay across an elastic shrink")
                 self._replay_ghost(tid, a, loc_of[a.pe])
         self._newly = list(self._ready)
+        # replaying a cancelled task's last live predecessor re-readies it;
+        # withdrawn work must stay withdrawn
+        self._drop_cancelled()
 
     def _replay_ghost(self, tid: int, a: Assignment, loc: str) -> None:
         """Replay a task that ran on a PE that has since left the pool:
@@ -1586,9 +1715,10 @@ class OnlineEngine(_Engine):
             try:
                 plan = self._plan(tid, loc)
             except KeyError:
-                # a link into this task's location left the matrix — its
-                # bookings no longer constrain anyone (repool drops those
-                # horizons too)
+                # a link into this task's location left the matrix (repool
+                # drops those horizons too), or a predecessor is an
+                # invalidated orphan awaiting recompute — either way the
+                # original bookings no longer constrain anyone
                 plan = ()
             if plan:
                 lf = self.link_free
@@ -1603,18 +1733,68 @@ class OnlineEngine(_Engine):
         self.assignments.append(dataclasses.replace(a))
         self._finish[tid] = a.finish
         self._placed_loc[tid] = loc
+        self._settle_replayed(tid, a)
+
+    def _settle_replayed(self, tid: int, a: Assignment) -> None:
+        """Shared tail of the trusting replay paths: retire the task from
+        the ready set and ripple the dependency counters.
+
+        A replayed survivor may be an *orphan*: its predecessor was
+        invalidated (its output must be recomputed for some other
+        consumer) while this task already executed and holds live copies
+        of everything it needed. Orphans were never in the ready set —
+        that is legitimate, not a corrupt record, so only unexplained
+        missing-ready entries raise. The ``placed_loc`` guard in the
+        ripple (and in ``_place_i``) keeps the recomputed producer from
+        re-readying an already-placed orphan."""
+        placed_loc = self._placed_loc
         try:
             del self._ready[tid]
         except KeyError:
-            raise ValueError(f"task {a.task!r} is not ready") from None
+            if all(placed_loc[p] is not None for p in self._di.preds[tid]):
+                raise ValueError(f"task {a.task!r} is not ready") from None
         npl = self._n_preds_left
         ready = self._ready
         newly = self._newly
         for s in self._di.succs[tid]:
             npl[s] -= 1
-            if npl[s] == 0:
+            if npl[s] == 0 and placed_loc[s] is None:
                 ready[s] = None
                 newly.append(s)
+
+    def _replay_trusted(self, tid: int, a: Assignment, pj: int) -> None:
+        """Replay a task on an in-pool PE trusting the recorded times:
+        book its transfers FIFO at the recorded hold, charge the PE horizon
+        to the recorded finish, and skip the strict recompute check (a
+        gapped history's recomputation legitimately diverges — see
+        :meth:`replay`). Unlike :meth:`_replay_ghost` the PE is live, so
+        ``_placed`` and ``_pe_free`` are updated like a real placement."""
+        hold = a.start
+        if self.contended_links:
+            try:
+                plan = self._plan(tid, self._pi.pe_location[pj])
+            except KeyError:
+                # a predecessor is an invalidated orphan awaiting
+                # recompute: its original transfer bookings are vacated
+                # with it, so this consumer's plan cannot (and need not)
+                # be re-booked
+                plan = ()
+            if plan:
+                lf = self.link_free
+                for lk, dur in plan:
+                    s = lf.get(lk, 0.0)
+                    if s < hold:
+                        s = hold
+                    lf[lk] = s + dur
+                self.dirty.bump_location(self._pi.pe_loc_id[pj])
+        self.assignments.append(dataclasses.replace(a))
+        if a.finish > self._pe_free[pj]:
+            self._pe_free[pj] = a.finish
+            self.dirty.bump_pe(pj)
+        self._finish[tid] = a.finish
+        self._placed[tid] = pj
+        self._placed_loc[tid] = self._pi.pe_location[pj]
+        self._settle_replayed(tid, a)
 
 
 # ---------------------------------------------------------------------------
@@ -2267,8 +2447,9 @@ class _HeftRun(_PolicyRun):
         eng = self.eng
         order, starts, fins, slots, prefmax = self._state
         finish = eng._finish
+        cancelled = eng._cancelled
         cursor = self._cursor
-        while finish[order[cursor]] is not None:
+        while finish[order[cursor]] is not None or order[cursor] in cancelled:
             cursor += 1
         self._cursor = cursor + 1
         tid = order[cursor]

@@ -120,7 +120,9 @@ class RecoveryPolicy:
             self.slow[event.worker] = event.factor
             act = RecoveryAction(step, event, "monitor")
         elif event.kind == "rejoin":
-            self.monitor.health[event.worker].alive = True
+            # proper rejoin: clears stale strikes and restarts the EWMA so
+            # the worker is not re-convicted from pre-exclusion state
+            self.monitor.mark_alive(event.worker)
             self.slow.pop(event.worker, None)
             plan = plan_remesh(self.healthy_devices(), self.model_axis,
                                current_data_axis, allow_grow=True)

@@ -1,0 +1,210 @@
+"""Chaos harness: randomized mid-flight failures vs the recovery invariants.
+
+A hypothesis scenario fuzzer over (DAG template x step count x failure
+time x failed-PE set x arrival period x policy). Every scenario must
+satisfy, after ``OnlineDriver.fail`` and a full drain:
+
+  * **recovery differential** — continuing the failed driver is
+    byte-identical to ``restart_from_history`` on the surviving pool with
+    the surviving record + retry floors + cancellations;
+  * **no lost tasks** — every admitted, non-cancelled task is placed
+    exactly once in the final schedule;
+  * **no zombie placements** — nothing placed on a dead PE after the
+    failure time, and every resubmitted task starts at/after its retry
+    floor (>= the failure time);
+  * **dependency soundness** — nothing executes (``start + comm_wait``)
+    before all its predecessors' recorded finishes, across the
+    survivor/recompute boundary.
+
+Strategies stick to integers/floats/sampled_from so the module runs
+under the deterministic conftest fallback when hypothesis is not
+installed.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG, Task
+from repro.core.online import OnlineDriver, restart_from_history
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES
+
+N_INSTANCES = 5
+OPS = [
+    "ingest",
+    "sql_transform",
+    "kmeans",
+    "summarize",
+    "window_agg",
+    "linreg",
+    "anomaly",
+    "export",
+]
+
+
+def _template(seed: int, n: int = 8) -> PipelineDAG:
+    rng = np.random.default_rng(seed)
+    g = PipelineDAG(f"chaos{seed}")
+    for i in range(n):
+        task = Task(
+            f"t{i}",
+            str(rng.choice(OPS)),
+            work=float(rng.uniform(0.5, 12)),
+            out_bytes=float(rng.uniform(0, 3e6)),
+            in_bytes=float(rng.uniform(0, 6e6)) if i == 0 else 0,
+        )
+        g.add_task(task)
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, 2), replace=False):
+            g.add_edge(f"t{j}", f"t{i}")
+    return g
+
+
+def _tuples(sched):
+    return [
+        (a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+        for a in sched.assignments
+    ]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    k=st.integers(min_value=1, max_value=30),
+    n_dead=st.integers(min_value=1, max_value=2),
+    dead_at=st.integers(min_value=0, max_value=10_000),
+    frac=st.floats(min_value=0.0, max_value=1.0),
+    period=st.floats(min_value=0.0, max_value=10.0),
+    policy=st.sampled_from(POLICIES),
+)
+def test_chaos_recovery_invariants(seed, k, n_dead, dead_at, frac, period, policy):
+    wl = _template(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    drv = OnlineDriver(pool, cost, policy=policy)
+    for i in range(N_INSTANCES):
+        drv.submit(wl.instance(i), arrival_t=i * period)
+    for _ in range(k):
+        if drv.step() is None and not drv.pending:
+            break
+    if not drv.eng.assignments:
+        return  # nothing in flight; nothing to chaos
+    # failure time somewhere inside the placed record's span
+    starts = sorted(a.start for a in drv.eng.assignments)
+    t_fail = starts[int(frac * (len(starts) - 1))]
+    pes = [p.name for p in pool.pes]
+    rng = np.random.default_rng(dead_at)
+    dead = list(rng.choice(pes, size=n_dead, replace=False))
+    rep = drv.fail(t_fail, dead)
+
+    # durable record snapshot, then drain both paths
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    cancelled = list(drv.cancelled_instances)
+    sched_a = drv.run()
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        policy,
+        admitted,
+        history,
+        pending,
+        loc_of,
+        retry_floors=floors,
+        cancelled=cancelled,
+    )
+    sched_b = drv_b.run()
+
+    # 1) recovery differential
+    assert _tuples(sched_a) == _tuples(sched_b)
+
+    # 2) no lost tasks: every non-cancelled task placed exactly once
+    cancelled_set = set(cancelled)
+    expected = {
+        t.name
+        for inst in drv.instances
+        if inst.name not in cancelled_set
+        for t in inst.dag.tasks
+    }
+    expected |= {
+        t.name
+        for dag, _t in pending
+        if dag.name not in cancelled_set
+        for t in dag.tasks
+    }
+    placed_names = [a.task for a in sched_a.assignments]
+    assert sorted(placed_names) == sorted(expected)
+
+    # 3) no zombie placements + retry floors respected
+    by_task = {a.task: a for a in sched_a.assignments}
+    for a in sched_a.assignments:
+        if a.start >= t_fail:
+            assert a.pe not in dead, f"{a.task} on dead {a.pe} at {a.start}"
+    for nm in rep.lost:
+        if nm in by_task:  # not cancelled with its instance
+            assert by_task[nm].start >= rep.retry_floors.get(nm, t_fail)
+
+    # 4) dependency soundness across the survivor/recompute boundary:
+    # nothing executes (start + comm_wait) before its inputs exist
+    for inst in drv.instances:
+        if inst.name in cancelled_set:
+            continue
+        for t_ in inst.dag.tasks:
+            a = by_task[t_.name]
+            for p in inst.dag.predecessors(t_.name):
+                pf = by_task[p.name].finish
+                assert a.start + a.comm_wait >= pf - 1e-9, f"{t_.name} < {p.name}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    k1=st.integers(min_value=1, max_value=20),
+    k2=st.integers(min_value=1, max_value=15),
+    policy=st.sampled_from(["eft", "etf", "heft", "vos"]),
+)
+def test_chaos_double_failure_differential(seed, k1, k2, policy):
+    """Two failures back-to-back (cumulative floors, shrinking pool): the
+    durable record after the *second* failure still restarts
+    byte-identically — including orphan survivors whose producer is being
+    recomputed for a third consumer."""
+    wl = _template(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    rng = np.random.default_rng(seed)
+    drv = OnlineDriver(pool, cost, policy=policy)
+    for i in range(N_INSTANCES):
+        drv.submit(wl.instance(i), arrival_t=i * 2.0)
+    for _ in range(k1):
+        if drv.step() is None and not drv.pending:
+            break
+    if not drv.eng.assignments:
+        return
+    pes = [p.name for p in drv.pool.pes]
+    drv.fail(max(a.start for a in drv.eng.assignments), [str(rng.choice(pes))])
+    for _ in range(k2):
+        if drv.step() is None and not drv.pending:
+            break
+    if len(drv.pool.pes) > 2 and drv.eng.assignments:
+        pes = [p.name for p in drv.pool.pes]
+        drv.fail(max(a.start for a in drv.eng.assignments), [str(rng.choice(pes))])
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    sa = _tuples(drv.run())
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        policy,
+        admitted,
+        history,
+        pending,
+        dict(drv._loc_of),
+        retry_floors=dict(drv.retry_floors),
+        cancelled=list(drv.cancelled_instances),
+    )
+    assert sa == _tuples(drv_b.run())

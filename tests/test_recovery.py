@@ -1,0 +1,556 @@
+"""Failure-aware online runtime (PR 6): lost-work recovery, retry/backoff.
+
+Four pillars:
+
+  * **Lineage model** (repro.core.recovery) — unit-pinned fixpoint rules:
+    in-flight work on dead PEs is lost, completed outputs survive iff a
+    live copy exists (producer PE or a consumer that had already fetched),
+    loss propagates to dependents that executed after the failure, link
+    victims seed the fixpoint, retry floors grow exponentially and exhaust
+    into cancellation, flapping PEs are quarantined.
+  * **Recovery differential** — after ``OnlineDriver.fail`` the live
+    driver's remaining run is byte-identical to ``restart_from_history``
+    on the surviving pool with the surviving history + retry floors +
+    cancellations, for all 7 policies (golden digests + parametrised).
+  * **Health wiring** — ``HealthMonitor`` heartbeat-death drives the
+    lost-work path and straggler conviction the transient prune path,
+    end-to-end through ``apply_health``.
+  * **Executed recovery** — the ``Executor`` consumes a
+    ``FailureInjector`` schedule; the simulated lineage loss is validated
+    against what execution actually lost, and ``resume_from`` completes
+    the pipeline with output parity.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.elastic import HealthMonitor
+from repro.core.executor import Executor
+from repro.core.online import OnlineDriver, restart_from_history
+from repro.core.recovery import (
+    PEBackoff,
+    RetryState,
+    TaskRecord,
+    compute_lost,
+    lost_exec_seconds,
+)
+from repro.core.resources import paper_pool
+from repro.core.schedulers import POLICIES, assignment_digest, schedule
+from repro.core.vos import ValueCurve
+from repro.pipeline.workloads import ds_workload, ds_workload_executable
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
+
+
+def _assignment_tuples(sched):
+    return [
+        (a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+        for a in sched.assignments
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Lineage model (pure, repro.core.recovery)
+# ---------------------------------------------------------------------------
+
+
+# a -> b -> c, plus an independent d; exec_start == start (no comm)
+_CHAIN = {
+    "a": TaskRecord("p1", 0.0, 0.0, 10.0),
+    "b": TaskRecord("p2", 10.0, 12.0, 20.0),
+    "c": TaskRecord("p2", 20.0, 20.0, 30.0),
+    "d": TaskRecord("p3", 0.0, 0.0, 25.0),
+}
+_SUCCS = {"a": ["b"], "b": ["c"], "c": [], "d": []}
+_PREDS = {"a": [], "b": ["a"], "c": ["b"], "d": []}
+
+
+def _lost(dead, t, records=_CHAIN, extra=frozenset(), cancelled=frozenset()):
+    return compute_lost(
+        records,
+        lambda n: _SUCCS[n],
+        lambda n: _PREDS[n],
+        set(dead),
+        t,
+        extra_lost=extra,
+        cancelled=cancelled,
+    )
+
+
+def test_inflight_on_dead_pe_is_lost():
+    # at t=5 only 'a' (p1) and 'd' (p3) are running; p1 dies mid-'a'
+    assert _lost(["p1"], 5.0) == ["a", "b", "c"]  # loss cascades downward
+
+
+def test_completed_output_with_live_consumer_copy_survives():
+    # p1 dies at t=15: 'a' completed at 10 and its consumer 'b' started
+    # executing at 12 <= 15 on live p2 — 'b' holds a fetched copy, so 'a'
+    # survives even though its producer PE is gone
+    assert _lost(["p1"], 15.0) == []
+
+
+def test_completed_output_without_copy_is_lost_when_needed():
+    # p1 dies at t=11: 'a' completed, but consumer 'b' only starts
+    # *executing* at 12 (comm_wait until then) — no live copy anywhere,
+    # and 'b'/'c' still need it
+    assert _lost(["p1"], 11.0) == ["a", "b", "c"]
+
+
+def test_unneeded_output_is_not_recomputed():
+    # sink 'd' completed on p3 before p3 dies at t=26; nothing consumes it
+    assert _lost(["p3"], 26.0) == []
+
+
+def test_link_victims_seed_the_fixpoint():
+    # no PE died, but 'b' was mid-transfer on a dead link
+    assert _lost([], 11.0, extra=frozenset({"b"})) == ["b", "c"]
+
+
+def test_cancelled_successors_do_not_pin_outputs():
+    # 'a' completed on dead p1, its only consumer 'b' unplaced: normally a
+    # recompute — but when the downstream is cancelled, nothing live needs
+    # the output and nothing is recomputed
+    records = {"a": _CHAIN["a"]}
+    args = (records, lambda n: _SUCCS[n], lambda n: _PREDS[n], {"p1"}, 11.0)
+    assert compute_lost(*args) == ["a"]
+    assert compute_lost(*args, cancelled=frozenset({"b", "c"})) == []
+
+
+def test_lost_exec_seconds_charges_burnt_work():
+    # 'a' ran 10s (complete), 'b' executed 12->14 at t=14 (2s burnt);
+    # in-flight burn is capped at t
+    secs = lost_exec_seconds(_CHAIN, ["a", "b"], 14.0)
+    assert secs == pytest.approx(10.0 + 2.0)
+
+
+def test_retry_floors_grow_exponentially_then_exhaust():
+    rs = RetryState(budget=3, backoff_base=2.0)
+    f1, ex1 = rs.charge(["x"], 100.0)
+    f2, ex2 = rs.charge(["x"], 200.0)
+    f3, ex3 = rs.charge(["x"], 300.0)
+    f4, ex4 = rs.charge(["x"], 400.0)
+    assert f1["x"] == 102.0 and f2["x"] == 204.0 and f3["x"] == 308.0
+    assert ex1 == ex2 == ex3 == []
+    assert "x" not in f4 and ex4 == ["x"]
+    with pytest.raises(ValueError):
+        RetryState(budget=0)
+
+
+def test_pe_backoff_quarantine_doubles_and_caps():
+    bo = PEBackoff(base=30.0, max_window=100.0)
+    assert bo.record_failure("pe", 0.0) == 30.0
+    assert bo.quarantined("pe", 29.0) and not bo.quarantined("pe", 30.0)
+    assert bo.record_failure("pe", 50.0) == 110.0  # 50 + 60
+    assert bo.record_failure("pe", 200.0) == 300.0  # window capped at 100
+    assert bo.rejoin_at("pe") == 300.0
+    assert not bo.quarantined("never_failed", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Recovery differential — fail() vs restart_from_history, all 7 policies
+# ---------------------------------------------------------------------------
+
+
+def _fail_split(policy, dead, k=50, n_instances=12, period=3.0, links=(), budget=3):
+    """Drive ``k`` events, fail ``dead`` at the frontier, finish via (A)
+    the live driver and (B) restart-from-history on the surviving record;
+    return both tuple lists plus the report and live driver."""
+    wl = ds_workload()
+    cost = CostModel()
+    drv = OnlineDriver(paper_pool(), cost, policy=policy)
+    drv.retry = RetryState(budget=budget)
+    for i in range(n_instances):
+        drv.submit(wl.instance(i), arrival_t=i * period)
+    for _ in range(k):
+        assert drv.step() is not None
+    t_fail = max(a.start for a in drv.eng.assignments)
+    rep = drv.fail(t_fail, dead, links=links)
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    cancelled = list(drv.cancelled_instances)
+    sched_a = drv.run()
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        policy,
+        admitted,
+        history,
+        pending,
+        loc_of,
+        retry_floors=floors,
+        cancelled=cancelled,
+    )
+    sched_b = drv_b.run()
+    return _assignment_tuples(sched_a), _assignment_tuples(sched_b), rep, drv
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_recovery_matches_restart_all_policies(policy):
+    """Continuing after fail() is byte-identical to a restart on the
+    surviving pool with the lost subgraph resubmitted."""
+    a, b, rep, drv = _fail_split(policy, ["xeon2", "arm1"])
+    assert a == b
+    # graceful completion: every task placed exactly once in the end
+    assert len(a) == 12 * 16
+    assert len({t[0] for t in a}) == 12 * 16
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_recovery_golden_digest(policy):
+    """The canonical recovery scenario's full post-recovery schedule is
+    pinned by checked-in digest, per policy."""
+    with open(GOLDEN) as f:
+        g = json.load(f)[f"recovery_{policy}_n12"]
+    a, _b, rep, drv = _fail_split(policy, ["xeon2", "arm1"])
+    sched = drv.schedule()
+    assert assignment_digest(sched.assignments) == g["digest"]
+    assert sched.makespan == g["makespan"]
+    assert len(rep.lost) == g["n_lost"]
+
+
+def test_no_placement_on_dead_pes_and_floors_respected():
+    a, _b, rep, drv = _fail_split("eft", ["xeon2", "arm1"])
+    assert rep.lost  # the scenario actually loses work
+    by_task = {t[0]: t for t in a}
+    for nm in rep.lost:
+        task, _op, pe, start, *_ = by_task[nm]
+        assert pe not in ("xeon2", "arm1")
+        assert start >= rep.retry_floors[nm] >= rep.t
+    # survivors keep their recorded placements (work is not redone)
+    surv_names = {t[0] for t in a} - set(rep.lost)
+    assert rep.survivors == 50 - len(rep.lost)
+    assert len(surv_names) == 12 * 16 - len(rep.lost)
+
+
+def test_link_failure_invalidates_inflight_transfers():
+    """A transient link loss at mid-transfer time invalidates exactly the
+    placements riding the link, and the differential still holds."""
+    wl = ds_workload()
+    cost = CostModel()
+    drv = OnlineDriver(paper_pool(), cost, policy="eft")
+    for i in range(6):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    for _ in range(40):
+        drv.step()
+    riding = [a for a in drv.eng.assignments if a.comm_wait > 0]
+    assert riding
+    t = riding[len(riding) // 2].start + 1e-9
+    rep = drv.fail(t, links=[("frontend", "backend"), ("backend", "frontend")])
+    assert rep.lost and not rep.dead_pes
+    # the pool (and its link matrix) is unchanged — transient semantics
+    assert [p.name for p in drv.pool.pes] == [p.name for p in paper_pool().pes]
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    sa = _assignment_tuples(drv.run())
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        "eft",
+        admitted,
+        history,
+        pending,
+        dict(drv._loc_of),
+        retry_floors=dict(drv.retry_floors),
+        cancelled=list(drv.cancelled_instances),
+    )
+    assert sa == _assignment_tuples(drv_b.run())
+
+
+def test_noop_failure_keeps_running():
+    """A failure that loses nothing (idle PE, no pooled state touched)
+    must not derail the live selector (regression: unconditional rebind
+    stranded the advertised ready set)."""
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(4):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    for _ in range(30):
+        drv.step()
+    rep = drv.fail(0.0, links=[("frontend", "backend")])  # before any work
+    assert not rep.lost
+    sched = drv.run()
+    assert len(sched.assignments) == 4 * 16
+
+
+def test_retry_exhaustion_cancels_instance():
+    """Failing the same task past its budget cancels its whole instance;
+    the cancelled work is never placed and the differential holds."""
+    wl = ds_workload()
+    cost = CostModel()
+    drv = OnlineDriver(paper_pool(), cost, policy="eft")
+    drv.retry = RetryState(budget=1)
+    for i in range(6):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    for _ in range(40):
+        drv.step()
+    last = max(drv.eng.assignments, key=lambda a: a.start)
+    r1 = drv.fail(last.start, [last.pe])
+    assert r1.lost and not r1.cancelled
+    target = r1.lost[0]
+    while all(a.task != target for a in drv.eng.assignments):
+        assert drv.step() is not None
+    a2 = next(a for a in drv.eng.assignments if a.task == target)
+    r2 = drv.fail(a2.start, [a2.pe])
+    assert target in r2.lost
+    victim_inst = "ds_workload#" + target.rsplit("#", 1)[-1]
+    assert victim_inst in r2.cancelled
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    sa = _assignment_tuples(drv.run())
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        "eft",
+        admitted,
+        history,
+        pending,
+        dict(drv._loc_of),
+        retry_floors=dict(drv.retry_floors),
+        cancelled=list(drv.cancelled_instances),
+    )
+    assert sa == _assignment_tuples(drv_b.run())
+    # cancelled instance: no new placements, no completion, result records
+    placed = {t[0] for t in sa}
+    assert target not in placed
+    res = drv.result()
+    assert victim_inst in res.cancelled
+    assert all(n != victim_inst for n, _t in res.completions)
+    assert res.n_failures == 2 and res.n_lost_tasks >= 2
+    assert res.lost_exec_seconds > 0
+
+
+def test_shed_drops_lowest_value_pending_first():
+    """Under capacity loss, pending (unadmitted) instances are shed
+    lowest-ValueCurve-floor first; for time-floor policies that is the
+    latest arrivals."""
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(12):
+        drv.submit(wl.instance(i), arrival_t=i * 40.0)
+    for _ in range(30):
+        drv.step()
+    assert drv.pending > 4
+    t = max(a.start for a in drv.eng.assignments)
+    rep = drv.fail(t, ["xeon0", "xeon1", "xeon2"], shed="auto")
+    assert rep.shed  # capacity loss sheds proportionally
+    shed_ids = sorted(int(n.rsplit("#", 1)[-1]) for n in rep.shed)
+    assert shed_ids == list(range(12 - len(rep.shed), 12))  # latest first
+    sched = drv.run()
+    placed_ids = {a.task.rsplit("#", 1)[-1] for a in sched.assignments}
+    assert not placed_ids & {str(i) for i in shed_ids}
+    assert set(drv.result().shed) == set(rep.shed)
+
+
+def test_shed_prefers_low_value_curves_under_vos():
+    """With per-instance SLO curves the shed order is value-driven: the
+    low-value instance goes before a later-arriving high-value one."""
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="vos")
+    drv.submit(wl.instance(0), arrival_t=0.0)
+    for _ in range(8):
+        drv.step()
+    # both pending: cheap arrives *earlier* than precious
+    drv.submit(
+        wl.instance(1), arrival_t=500.0, curve=ValueCurve.step(10_000.0, value=1.0)
+    )
+    drv.submit(
+        wl.instance(2), arrival_t=600.0, curve=ValueCurve.step(10_000.0, value=100.0)
+    )
+    shed = drv.shed_pending(1)
+    assert [dag.name for dag, _t in shed] == ["ds_workload#1"]
+
+
+def test_rejoin_quarantines_flapping_pes():
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    for i in range(6):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    for _ in range(30):
+        drv.step()
+    t = max(a.start for a in drv.eng.assignments)
+    drv.fail(t, ["xeon0", "xeon1", "xeon2"])
+    assert all(not p.name.startswith("xeon") for p in drv.pool.pes)
+    acc, ref = drv.rejoin(t + 1.0, paper_pool().subset(["xeon0"]))
+    assert (acc, ref) == ([], ["xeon0"])  # still in quarantine
+    t_ok = drv.pe_backoff.rejoin_at("xeon0") + 1.0
+    acc, ref = drv.rejoin(t_ok, paper_pool().subset(["xeon0"]))
+    assert (acc, ref) == (["xeon0"], [])
+    # fresh load arrives once the PE is back: the rejoin is not cosmetic
+    # (xeon0 is the only xeon-class PE left, so work must land there)
+    for i in range(6, 12):
+        drv.submit(wl.instance(i), arrival_t=t_ok)
+    n_before = len(drv.eng.assignments)
+    sched = drv.run()
+    assert len(sched.assignments) == 12 * 16
+    assert any(a.pe == "xeon0" for a in sched.assignments[n_before:])
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor fixes + end-to-end wiring
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_join_counts_as_heartbeat():
+    # a monitor started late must not convict quiet workers instantly
+    mon = HealthMonitor(["w0", "w1"], heartbeat_timeout=10.0, now=1000.0)
+    assert mon.dead(now=1005.0) == []
+    assert mon.dead(now=1011.0) == ["w0", "w1"]
+
+
+def test_sweep_dead_convicts_and_returns():
+    mon = HealthMonitor(["w0", "w1"], heartbeat_timeout=10.0)
+    mon.heartbeat("w0", now=95.0)
+    assert mon.sweep_dead(now=100.0) == ["w1"]
+    assert mon.healthy() == ["w0"]
+    assert mon.sweep_dead(now=100.0) == []  # already convicted
+
+
+def test_strikes_reset_on_mark_dead_and_rejoin():
+    mon = HealthMonitor(["s", "a", "b"], patience=2)
+    for _ in range(3):
+        mon.observe("s", 10.0, now=0.0)
+        mon.observe("a", 1.0, now=0.0)
+        mon.observe("b", 1.0, now=0.0)
+    assert mon.stragglers() == ["s"]
+    mon.mark_dead("s")
+    assert mon._strikes["s"] == 0
+    mon.mark_alive("s", now=5.0)
+    # clean slate: not re-convicted from pre-exclusion state, EWMA restarts
+    assert mon.stragglers() == []
+    assert mon.health["s"].steps == 0 and mon.health["s"].alive
+    mon.observe("s", 1.0, now=6.0)
+    assert mon.stragglers() == []
+
+
+def test_recovery_policy_rejoin_uses_clean_slate():
+    from repro.train.fault_tolerance import FailureEvent, RecoveryPolicy
+
+    pol = RecoveryPolicy(["w0", "w1", "w2", "w3"], devices_per_worker=2, model_axis=2)
+    rates = {"w0": 10.0, "w1": 1.0, "w2": 1.0, "w3": 1.0}
+    for _ in range(5):  # first round's median only sees w0's own EWMA
+        pol.check_stragglers(0, rates, now=0.0, current_data_axis=4)
+    assert not pol.monitor.health["w0"].alive
+    act = pol.handle(5, FailureEvent(5, "w0", "rejoin"), current_data_axis=3)
+    assert act.action == "remesh_grow"
+    h = pol.monitor.health["w0"]
+    assert h.alive and h.steps == 0 and pol.monitor._strikes["w0"] == 0
+
+
+def test_apply_health_end_to_end():
+    """Heartbeat death -> lost-work recovery; straggler conviction ->
+    transient prune. One call wires both."""
+    wl = ds_workload()
+    pool = paper_pool()
+    drv = OnlineDriver(pool, CostModel(), policy="eft")
+    for i in range(6):
+        drv.submit(wl.instance(i), arrival_t=0.0)
+    for _ in range(30):
+        drv.step()
+    mon = HealthMonitor([p.name for p in pool.pes], heartbeat_timeout=5.0)
+    for _ in range(4):
+        for p in pool.pes:
+            if p.name == "xeon1":
+                continue  # silent: a dead worker reports nothing
+            mon.observe(p.name, 10.0 if p.name == "volta0" else 1.0, now=8.0)
+    rep = drv.apply_health(mon, now=10.0)
+    assert rep is not None and rep.dead_pes == ("xeon1",)
+    pool_names = [p.name for p in drv.pool.pes]
+    assert "xeon1" not in pool_names and "volta0" not in pool_names
+    n_before = len(drv.eng.assignments)
+    sched = drv.run()
+    assert all(a.pe not in ("xeon1", "volta0") for a in sched.assignments[n_before:])
+    assert len(sched.assignments) == 6 * 16
+
+
+# ---------------------------------------------------------------------------
+# Executed recovery — simulated lineage vs the real Executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def executable():
+    wl = ds_workload_executable()
+    pool = paper_pool()
+    sched = schedule(wl, pool, CostModel(), policy="eft")
+    raw = np.random.default_rng(0).normal(0, 1, (256, 8)).astype(np.float32)
+    return wl, pool, sched, raw
+
+
+def test_executor_injected_death_loses_lineage(executable):
+    from repro.train.fault_tolerance import FailureEvent, FailureInjector
+
+    wl, pool, sched, raw = executable
+    topo = {t.name: i for i, t in enumerate(wl.topological_order())}
+    order = sorted(sched.assignments, key=lambda a: (a.start, topo[a.task]))
+    step, victim = 6, order[5].pe
+    inj = FailureInjector([FailureEvent(step, victim, "die")])
+    rep = Executor(pool).execute(wl, sched, inputs={"ingest": raw}, injector=inj)
+    assert not rep.complete(wl)
+    assert rep.dead == [victim]
+    # every reported-lost output really has no live copy
+    for nm in rep.lost:
+        assert nm not in rep.outputs and not rep.copies.get(nm)
+    # simulated lineage agrees: what the planner would recompute is
+    # exactly work the executed run is missing
+    records = {
+        a.task: TaskRecord(a.pe, a.start, a.start + a.comm_wait, a.finish)
+        for a in order[:step]
+    }
+    t = order[step].start
+    sim_lost = compute_lost(
+        records,
+        lambda nm: [s.name for s in wl.successors(nm)],
+        lambda nm: [p.name for p in wl.predecessors(nm)],
+        {victim},
+        t,
+    )
+    missing = {t_.name for t_ in wl.tasks} - set(rep.outputs)
+    assert set(sim_lost) <= missing
+
+
+def test_executor_resume_completes_with_parity(executable):
+    from repro.train.fault_tolerance import FailureEvent, FailureInjector
+
+    wl, pool, sched, raw = executable
+    victim = sched.assignments[5].pe
+    inj = FailureInjector([FailureEvent(6, victim, "die")])
+    exe = Executor(pool)
+    rep1 = exe.execute(wl, sched, inputs={"ingest": raw}, injector=inj)
+    assert not rep1.complete(wl)
+    # recovery: re-plan on the surviving pool, resume from the report
+    sched2 = schedule(wl, pool.without(rep1.dead), CostModel(), policy="eft")
+    rep2 = exe.execute(wl, sched2, inputs={"ingest": raw}, resume_from=rep1)
+    assert rep2.complete(wl)
+    # only missing work re-ran; surviving outputs were not recomputed
+    reran = {r.task for r in rep2.runs}
+    assert reran == {t.name for t in wl.tasks} - set(rep1.outputs)
+    full = Executor(pool).execute(wl, sched, inputs={"ingest": raw})
+    np.testing.assert_allclose(
+        np.asarray(rep2.outputs["export"]),
+        np.asarray(full.outputs["export"]),
+        rtol=2e-3,
+    )
+
+
+def test_executor_rejoin_keeps_data_lost(executable):
+    from repro.train.fault_tolerance import FailureEvent, FailureInjector
+
+    wl, pool, sched, raw = executable
+    victim = sched.assignments[2].pe
+    inj = FailureInjector(
+        [FailureEvent(3, victim, "die"), FailureEvent(5, victim, "rejoin")]
+    )
+    rep = Executor(pool).execute(wl, sched, inputs={"ingest": raw}, injector=inj)
+    # the PE is alive again at the end, but outputs dropped at death stay
+    # dropped (a single pass never re-runs an assignment)
+    assert victim not in rep.dead
+    assert all(nm not in rep.outputs for nm in rep.lost)
