@@ -1,0 +1,240 @@
+"""Federation benchmark: the edge↔DC scenario matrix (robustness PR).
+
+    PYTHONPATH=src python benchmarks/bench_federation.py \
+        [--n 24] [--policy eft] [--period 4.0] \
+        [--out BENCH_sched.json] [--smoke] [--max-seconds 120]
+
+Four deterministic scenarios of ``ds_workload`` instances streaming onto
+a two-site :func:`~repro.core.federation.paper_federation` (data gravity
+on: ``CostModel(data_home=...)`` prices raw-input uploads over the WAN):
+
+  * **edge_heavy** — the edge box outnumbers the DC (6×ARM + 2×Volta vs
+    1×Xeon): data gravity plus capacity keeps the pipeline at home, so
+    WAN bytes stay near the residual cross-site pulls.
+  * **dc_heavy** — the DC dwarfs the edge (1×ARM vs 6×Xeon + 2×V100 +
+    2×Alveo): compute pulls stages backend-ward and pays the 4G uplink.
+  * **partitioned_wan** — the paper topology; mid-flight the WAN cuts
+    the DC off (``partition(..., defer="all")``), the driver keeps
+    placing edge-side work (degraded mode), and the cut heals. Nothing
+    is recomputed — a partition is pricing, not surgery.
+  * **site_loss** — the DC dies outright (``fail_site``): in-flight and
+    orphaned work recomputes on the edge, and the site rejoins after its
+    quarantine window.
+
+Per scenario: makespan, goodput (useful exec-seconds over useful +
+invalidated), recomputed work, WAN bytes/crossings
+(:func:`~repro.core.federation.wan_traffic`), and the schedule's sha256
+assignment digest.
+
+``--smoke`` (CI gate): small n; every digest must match
+``tests/golden_federation.json`` (absent file fails the gate) and the
+whole matrix must finish within ``--max-seconds`` wall time.
+``--out`` merges results under a ``"federation"`` key of the given JSON
+(typically BENCH_sched.json; other sections stay untouched).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "tests", "golden_federation.json")
+
+SCENARIOS = ("edge_heavy", "dc_heavy", "partitioned_wan", "site_loss")
+
+
+def _federation(scenario):
+    from repro.core.federation import paper_federation
+    if scenario == "edge_heavy":
+        return paper_federation(n_arm=6, n_volta=2, n_xeon=1, n_v100=0,
+                                n_alveo=0)
+    if scenario == "dc_heavy":
+        return paper_federation(n_arm=1, n_volta=0, n_xeon=6, n_v100=2,
+                                n_alveo=2)
+    return paper_federation()  # the paper topology, for the fault scripts
+
+
+def _high(drv) -> float:
+    return max((a.start for a in drv.eng.assignments), default=0.0)
+
+
+def run_scenario(scenario: str, n: int, period: float, policy: str) -> dict:
+    from repro.core.cost_model import CostModel
+    from repro.core.federation import wan_traffic
+    from repro.core.online import OnlineDriver
+    from repro.core.schedulers import assignment_digest
+    from repro.pipeline.workloads import ds_workload
+
+    wl = ds_workload()
+    fed = _federation(scenario)
+    cost = CostModel(data_home=fed.data_home)
+    drv = OnlineDriver(fed, cost, policy=policy)
+    for i in range(n):
+        drv.submit(wl.instance(i), arrival_t=i * period)
+
+    recomputed = 0.0
+    events: list = []
+    if scenario in ("partitioned_wan", "site_loss"):
+        # place ~25% of the stream, fire the event at the placement
+        # horizon, run degraded for a few steps, then recover — all
+        # sim-time choices derived from the record, so the scenario is
+        # deterministic and its digest pinnable
+        for _ in range(max(len(wl.tasks) * n // 4, 8)):
+            drv.step()
+        t0 = _high(drv)
+        if scenario == "partitioned_wan":
+            drv.partition(t0, "dc", defer="all")
+            for _ in range(8):
+                drv.step()
+            th = max(t0 + 15.0, _high(drv))  # inside the 30 s window
+            rep = drv.heal(th, "dc")
+            events.append("partition@%.1f heal@%.1f%s" % (
+                t0, th, "" if rep is None else " (late->escalated)"))
+            if rep is not None:
+                recomputed += rep.lost_exec_seconds
+        else:
+            rep = drv.fail_site(t0, "dc")
+            recomputed += rep.lost_exec_seconds
+            for _ in range(8):
+                drv.step()
+            tr = max(t0 + 31.0, _high(drv))  # past the quarantine window
+            accepted, _refused = drv.rejoin_site(tr, "dc")
+            while not accepted:  # flap-damped: try past the next window
+                tr += 30.0
+                accepted, _refused = drv.rejoin_site(tr, "dc")
+            events.append("fail_site@%.1f rejoin@%.1f" % (t0, tr))
+
+    sched = drv.run()
+    useful = sum(a.finish - a.start - a.comm_wait for a in sched.assignments)
+    traffic = wan_traffic(sched.assignments,
+                          [inst.dag for inst in drv.instances],
+                          drv.pool, data_home=fed.data_home)
+    return {
+        "policy": policy,
+        "n": n,
+        "makespan": round(max((a.finish for a in sched.assignments),
+                              default=0.0), 3),
+        "goodput": round(useful / (useful + recomputed), 4)
+        if useful else 0.0,
+        "recomputed_exec_seconds": round(recomputed, 2),
+        "wan_bytes": round(traffic.bytes_moved, 0),
+        "wan_upload_bytes": round(traffic.upload_bytes, 0),
+        "wan_crossings": traffic.crossings,
+        "events": events,
+        "digest": assignment_digest(sched.assignments),
+    }
+
+
+def bench(n: int, period: float, policy: str, check_golden: bool):
+    results: dict = {}
+    failures: list = []
+    golden = {}
+    if check_golden:
+        if os.path.exists(GOLDEN_PATH):
+            with open(GOLDEN_PATH) as f:
+                golden = json.load(f)
+        else:
+            # an absent golden file must fail the gate, not silently pass
+            failures.append(f"--check-golden: {GOLDEN_PATH} not found")
+    for scenario in SCENARIOS:
+        r = run_scenario(scenario, n, period, policy)
+        results[scenario] = r
+        note = ""
+        gkey = f"{scenario}_{policy}_n{n}"
+        if gkey in golden:
+            if r["digest"] == golden[gkey]["digest"]:
+                note = "  [golden OK]"
+            else:
+                note = "  [golden DIVERGED]"
+                failures.append(
+                    f"{scenario}: digest diverged from "
+                    f"tests/golden_federation.json ({gkey})")
+        elif check_golden and not failures:
+            failures.append(f"--check-golden: no golden entry {gkey}")
+        print(f"federation,{scenario}_makespan,{r['makespan']:.1f},s  "
+              f"(goodput {r['goodput']:.4f}, recomputed "
+              f"{r['recomputed_exec_seconds']:.0f} exec-s, WAN "
+              f"{r['wan_bytes'] / 1e6:.1f} MB / {r['wan_crossings']} "
+              f"crossings){note}")
+    return results, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: n=12, digests vs "
+                         "tests/golden_federation.json, walltime bound")
+    ap.add_argument("--n", type=int, default=24,
+                    help="instances streamed per scenario")
+    ap.add_argument("--period", type=float, default=4.0)
+    ap.add_argument("--policy", default="eft")
+    ap.add_argument("--check-golden", action="store_true",
+                    help="fail on digest divergence from "
+                         "tests/golden_federation.json")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="(re)write tests/golden_federation.json from "
+                         "this run")
+    ap.add_argument("--max-seconds", type=float, default=120.0,
+                    help="smoke walltime gate over the whole matrix")
+    ap.add_argument("--out", default=None,
+                    help="merge results under a 'federation' key of this "
+                         "JSON (typically BENCH_sched.json)")
+    args = ap.parse_args(argv)
+    n = 12 if args.smoke else args.n
+    check = args.check_golden or args.smoke
+    t0 = time.perf_counter()
+    results, failures = bench(n, args.period, args.policy,
+                              check_golden=check and not args.write_golden)
+    wall = time.perf_counter() - t0
+    print(f"federation,matrix_wall,{wall:.2f},s")
+    if args.smoke and wall > args.max_seconds:
+        failures.append(
+            f"matrix took {wall:.1f}s > --max-seconds {args.max_seconds:g}")
+    if args.write_golden:
+        payload = {
+            f"{scenario}_{args.policy}_n{n}": {
+                "digest": r["digest"],
+                "makespan": r["makespan"],
+                "wan_bytes": r["wan_bytes"],
+            }
+            for scenario, r in results.items()
+        }
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    if args.out:
+        payload = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                payload = json.load(f)
+        payload["federation"] = {
+            "meta": {
+                "workload": "ds_workload x n streamed onto "
+                            "paper_federation variants via OnlineDriver, "
+                            "data gravity on (CostModel data_home)",
+                "scenarios": "edge_heavy / dc_heavy (topology skew), "
+                             "partitioned_wan (cut+defer+heal), "
+                             "site_loss (fail_site+quarantined rejoin)",
+                "period": args.period,
+                "total_seconds": round(wall, 1),
+            },
+            "scenarios": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

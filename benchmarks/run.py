@@ -6,6 +6,8 @@ Sections:
   fig6  — resource-pool configuration sweep (paper Fig. 6)
   fig7  — scheduling-policy sweep: exec time + mean utilisation (Fig. 7a/b)
   sched — scheduler engine wall-time per policy (see benchmarks/bench_sched.py)
+  federation — edge↔DC scenario matrix: topology skew, WAN partition,
+          site loss (see benchmarks/bench_federation.py)
   beyond — beyond-paper policies (HEFT / MinMin / VoS / Hwang-ETF)
   vos   — system-wide Value-of-Service per policy (paper §3/§4.2.3)
   exec  — real execution of the scheduled 16-task workload (host vs device)
@@ -82,6 +84,29 @@ def bench_sched(quick: bool) -> None:
         spec.loader.exec_module(bs)
     sizes = [20, 100] if quick else [100, 300]
     bs.bench(sizes, ("rr", "etf", "eft", "heft", "minmin"))
+
+
+def _load_sibling(name: str):
+    """Import a benchmarks/ sibling whether run as a module or a script."""
+    try:
+        import importlib
+        return importlib.import_module(f"benchmarks.{name}")
+    except ImportError:
+        import importlib.util
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            f"{name}.py")
+        spec = importlib.util.spec_from_file_location(name, path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+
+def bench_federation(quick: bool) -> None:
+    """Edge↔DC federation scenario matrix (WAN bytes, degraded-mode and
+    site-loss trajectories); numbers match BENCH_sched.json's
+    "federation" section."""
+    bf = _load_sibling("bench_federation")
+    bf.bench(12 if quick else 24, 4.0, "eft", check_golden=False)
 
 
 def bench_beyond_policies(n_instances: int) -> None:
@@ -228,12 +253,14 @@ def main(argv=None) -> int:
     ap.add_argument("--sections", default="all")
     args = ap.parse_args(argv)
     n = 20 if args.quick else 100
-    sections = (("fig6", "fig7", "sched", "beyond", "vos", "exec", "serve",
-                 "kern", "roofline") if args.sections == "all"
+    sections = (("fig6", "fig7", "sched", "federation", "beyond", "vos",
+                 "exec", "serve", "kern", "roofline")
+                if args.sections == "all"
                 else tuple(args.sections.split(",")))
     t0 = time.perf_counter()
     fns = {"fig6": lambda: bench_fig6(n), "fig7": lambda: bench_fig7(n),
            "sched": lambda: bench_sched(args.quick),
+           "federation": lambda: bench_federation(args.quick),
            "beyond": lambda: bench_beyond_policies(n),
            "vos": lambda: bench_vos(n), "exec": bench_execute,
            "serve": bench_serve, "kern": bench_kernels,

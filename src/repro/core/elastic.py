@@ -179,11 +179,38 @@ def prune_pool(pool, monitor: "HealthMonitor",
     re-provisioning" closed over the workload manager. Scheduler state
     that is *workload*-scoped (placed history by location, per-instance
     VoS value curves) survives the re-plan; only pool-derived state is
-    re-keyed."""
+    re-keyed.
+
+    Site-aware pruning: when the pool carries federation metadata
+    (``pool.site_of``, attached by
+    :meth:`repro.core.federation.FederatedPool.flatten`) and *every* PE of
+    a site is being dropped, the site's cross-site (WAN) links are pruned
+    with it in the same repool — a fully-convicted edge box takes its
+    uplink along instead of leaving a dangling channel to nowhere. Flat
+    pools (no ``site_of``) deliberately keep all links: the data-home
+    upload link must survive even when every data-home PE is removed,
+    because surviving plans still route raw-input uploads over it —
+    only explicit site metadata makes link-dropping safe."""
     if now is not None:
         monitor.sweep_dead(now)
     healthy = set(monitor.healthy()) - set(also_drop)
-    return pool.subset(p.name for p in pool.pes if p.name in healthy)
+    pruned = pool.subset(p.name for p in pool.pes if p.name in healthy)
+    site_of = getattr(pool, "site_of", None)
+    if site_of:
+        sites_before = {site_of[p.location] for p in pool.pes
+                        if p.location in site_of}
+        sites_after = {site_of[p.location] for p in pruned.pes
+                       if p.location in site_of}
+        gone = sites_before - sites_after
+        if gone:
+            dead_locs = {loc for loc, s in site_of.items() if s in gone}
+            drop_keys = [
+                (src, dst) for (src, dst) in pruned._links
+                if (src in dead_locs or dst in dead_locs)
+                and site_of.get(src) != site_of.get(dst)]
+            if drop_keys:
+                pruned = pruned.without_links(drop_keys)
+    return pruned
 
 
 # ---------------------------------------------------------------------------

@@ -112,10 +112,17 @@ class Executor:
         it is dropped (lineage loss; a consumer that already executed
         holds a fetched copy, so those survive). ``"slow"`` scales the
         worker's measured seconds, ``"rejoin"`` revives it (its lost data
-        stays lost). ``resume_from`` continues from a previous (failed)
-        report: surviving outputs and copy sets are carried over and only
-        missing work runs — executed recovery, validated against the
-        simulated recovery path in tests/test_recovery.py."""
+        stays lost). ``"partition"`` moves the named PE to the far side of
+        a network cut: its outputs and copies stay alive, but a task may
+        only fetch an input from a copy-holder on its *own* side — both
+        sides keep executing what they can reach (degraded mode), and
+        cross-partition consumers are skipped. ``"heal"`` reconnects the
+        PE; a later ``resume_from`` pass then recomputes exactly the
+        skipped cross-partition subgraph. ``resume_from`` continues from a
+        previous (failed) report: surviving outputs and copy sets are
+        carried over and only missing work runs — executed recovery,
+        validated against the simulated recovery path in
+        tests/test_recovery.py."""
         inputs = dict(inputs or {})
         # tie-break equal start times by topological order, not name: a
         # zero-duration predecessor can share its successor's start time,
@@ -129,6 +136,10 @@ class Executor:
             {nm: set(cs) for nm, cs in resume_from.copies.items()}
             if resume_from else {})
         dead: set = set(resume_from.dead) if resume_from else set()
+        # partitions are injector-scoped: a fresh execute() call starts
+        # with a whole network (the cut, unlike death, is not durable
+        # state of the report — resume-after-heal must see one side)
+        unreachable: set = set()
         slow: Dict[str, float] = {}
         runs: List[TaskRun] = []
         lost: List[str] = []
@@ -152,11 +163,25 @@ class Executor:
                     elif ev.kind == "rejoin":
                         dead.discard(ev.worker)
                         slow.pop(ev.worker, None)
+                    elif ev.kind == "partition":
+                        unreachable.add(ev.worker)
+                    elif ev.kind == "heal":
+                        unreachable.discard(ev.worker)
             if resume_from is not None and a.task in outputs:
                 continue  # computed before the failure; its copy survived
             task = dag.task(a.task)
             preds = dag.predecessors(task.name)
-            if a.pe in dead or any(p.name not in outputs for p in preds):
+
+            def _fetchable(p: Task) -> bool:
+                # an input is usable iff some live copy-holder sits on the
+                # same side of the cut as the consumer (same-side fetch)
+                if p.name not in outputs:
+                    return False
+                side = a.pe in unreachable
+                return any(c not in dead and (c in unreachable) == side
+                           for c in copies.get(p.name, ()))
+
+            if a.pe in dead or not all(_fetchable(p) for p in preds):
                 skipped.append(task.name)
                 continue
             args = [outputs[p.name] for p in preds]

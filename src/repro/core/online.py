@@ -66,8 +66,9 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG
-from repro.core.recovery import (PEBackoff, RecoveryReport, RetryState,
-                                 TaskRecord, compute_lost, lost_exec_seconds)
+from repro.core.recovery import (PartitionReport, PEBackoff, RecoveryReport,
+                                 RetryState, TaskRecord, compute_lost,
+                                 lost_exec_seconds)
 from repro.core.resources import ResourcePool
 from repro.core.schedulers import (Assignment, OnlineEngine, Schedule,
                                    make_policy_run)
@@ -131,6 +132,14 @@ class OnlineDriver:
     def __init__(self, pool: ResourcePool, cost: Optional[CostModel] = None,
                  policy: str = "eft", contended_links: bool = True,
                  **policy_kw) -> None:
+        #: site topology, when constructed over a
+        #: :class:`repro.core.federation.FederatedPool` — the engine always
+        #: sees the flattened pool; the federation only informs the
+        #: site-granularity event surface (partition/heal/fail_site)
+        self.federation = None
+        if hasattr(pool, "flatten"):
+            self.federation = pool
+            pool = pool.flatten()
         self.pool = pool
         self.cost = cost or CostModel()
         self.policy_name = policy
@@ -179,6 +188,25 @@ class OnlineDriver:
         self.retry_floors: Dict[str, float] = {}
         self.cancelled_instances: List[str] = []
         self.shed_instances: List[str] = []
+        # -- site-level fault domains (see repro.core.federation) ------------
+        #: flap quarantine at *site* granularity — a partition's quarantine
+        #: deadline doubles as the heal estimate priced into the floors
+        self.site_backoff = PEBackoff()
+        #: durable horizon-event log: (history index, kind, pe_map,
+        #: link_map) — with the surviving history this replays the exact
+        #: partition floors (see OnlineEngine.replay_with_horizons); fail()
+        #: re-indexes it against the surviving record
+        self.horizon_events: List[Tuple[int, str, dict, dict]] = []
+        #: partition reports, one per partition() event
+        self.partitions: List[PartitionReport] = []
+        #: WAN pairs currently cut (frozenset site pairs) / sites down
+        self._cut: set = set()
+        self._down_sites: set = set()
+        #: live partitions: site -> saved pre-raise horizons for heal
+        self._partition_saved: Dict[str, dict] = {}
+        #: pending instances deferred by a partition: name -> original
+        #: arrival (heal re-times them to max(original, heal time))
+        self._deferred_arrivals: Dict[str, float] = {}
 
     # -- submission / admission ----------------------------------------------
     def submit(self, dag: PipelineDAG, arrival_t: float = 0.0,
@@ -366,7 +394,8 @@ class OnlineDriver:
     # -- failure recovery -----------------------------------------------------
     def fail(self, t: float, pes: Sequence[str] = (),
              links: Sequence[Tuple[str, str]] = (),
-             shed: object = 0) -> RecoveryReport:
+             shed: object = 0, quarantine: bool = True,
+             drop_links: bool = False) -> RecoveryReport:
         """Recover from a failure at time ``t``: the named PEs die and the
         named ``(src_loc, dst_loc)`` links drop their in-flight transfers
         (transient — the link itself recovers; its victims' inputs do not).
@@ -383,11 +412,19 @@ class OnlineDriver:
         lost). Dead PEs are quarantined against flapping rejoins
         (:class:`repro.core.recovery.PEBackoff`).
 
+        ``quarantine=False`` skips the per-PE flap quarantine (used by the
+        site-granularity paths, which quarantine at site level via
+        :attr:`site_backoff` instead). ``drop_links=True`` removes the
+        named links from the pool's matrix permanently (site loss tears
+        down the site's WAN attachments; the default models a transient
+        link drop whose victims lose only their in-flight transfers).
+
         After the call, continuing this driver is byte-identical to
         :func:`restart_from_history` on the surviving pool with the
-        surviving history, cumulative ``retry_floors`` and ``cancelled``
-        instances — the recovery differential, pinned for all 7 policies
-        in tests/test_recovery.py."""
+        surviving history, cumulative ``retry_floors``, ``cancelled``
+        instances and re-indexed ``horizon_events`` — the recovery
+        differential, pinned for all 7 policies in tests/test_recovery.py
+        and at site granularity in tests/test_chaos.py."""
         t = float(t)
         t0 = time.perf_counter()
         eng = self.eng
@@ -397,8 +434,9 @@ class OnlineDriver:
         dead = tuple(dict.fromkeys(pes))
         dead_set = set(dead)
         dead_links = tuple((str(s), str(d)) for s, d in links)
-        for pe in dead:
-            self.pe_backoff.record_failure(pe, t)
+        if quarantine:
+            for pe in dead:
+                self.pe_backoff.record_failure(pe, t)
         # lineage pass over the placement record
         records = {a.task: TaskRecord(a.pe, a.start, a.start + a.comm_wait,
                                       a.finish)
@@ -411,6 +449,56 @@ class OnlineDriver:
             lambda nm: [names[p] for p in di.preds[id_of[nm]]],
             dead_set, t, extra_lost=victims, cancelled=cancelled_names)
         lost_secs = lost_exec_seconds(records, lost, t)
+        lost_set = set(lost)
+        # an invalidated task's output no longer exists anywhere: drop any
+        # re-home override from an earlier site loss (recompute re-places)
+        for nm in lost:
+            self._loc_of.pop(nm, None)
+        # Every survivor on a dead PE gets a task-name override in loc_of
+        # (it outranks PE lookup during replay — see
+        # SchedulerEngine.replay), which pins it to ghost replay: the dead
+        # PE's bookings died with it, so if a same-named PE later rejoins
+        # (at a fresh 0.0 horizon), neither a restart nor a later
+        # invalidate may re-book the pre-death placements on it. The
+        # override's location: normally the recorded location (the route
+        # to it still exists); under drop_links (site loss) that location
+        # is unroutable, so a survivor kept because an executed consumer
+        # on a live PE holds a fetched copy (compute_lost's has_copy
+        # rule) re-homes to the copy-holder's location, and one kept
+        # because nothing needs its output anymore keeps the recorded
+        # location (it is never fetched again).
+        rehomed = False
+        # drop_links fallback: a live-side location, so a re-homed
+        # ghost's replayed input transfers stay off the torn-down WAN —
+        # live booked nothing there (the route was gone at fail time),
+        # and a restart after the links are re-created must not re-book
+        # them on the fresh matrix either
+        live_loc = next((p.location for p in self.pool.pes
+                         if p.name not in dead_set), None)
+        for nm, r in records.items():
+            if nm in lost_set or r.pe not in dead_set:
+                continue
+            # an earlier fail's override (task-name key) stays put unless
+            # this one finds a better home
+            loc = self._loc_of.get(nm, self._loc_of[r.pe])
+            if drop_links:
+                if live_loc is not None:
+                    loc = live_loc
+                for s in (names[x] for x in di.succs[id_of[nm]]):
+                    sr = records.get(s)
+                    if (sr is not None and s not in lost_set
+                            and sr.exec_start <= t
+                            and sr.pe not in dead_set):
+                        loc = self._loc_of[sr.pe]
+                        break
+            self._loc_of[nm] = loc
+            # repool preserves _placed_loc and invalidate may not run
+            # (nothing lost) — push the re-home into the live engine
+            # directly; replay recomputes the same value from loc_of
+            eng._placed_loc[id_of[nm]] = loc
+            rehomed = True
+        if rehomed:
+            eng._plans = {}  # cached plans priced the old location
         # retry accounting: charge every lost task one attempt
         floors, exhausted = self.retry.charge(lost, t)
         for nm, fl in floors.items():
@@ -426,14 +514,44 @@ class OnlineDriver:
         # shrink the pool, then rebuild live state around the survivors
         pool_names = {p.name for p in self.pool.pes}
         dead_in_pool = [p for p in dead if p in pool_names]
+        dropped_links = [lk for lk in dead_links
+                         if drop_links and lk in self.pool._links]
         n_before = len(self.pool.pes)
-        if dead_in_pool:
+        if dead_in_pool or dropped_links:
             self.pool = self.pool.without(dead_in_pool)
+            if dropped_links:
+                self.pool = self.pool.without_links(dropped_links)
             eng.repool(self.pool)
+            # scrub removed PEs / dropped links from the durable
+            # horizon-event log: live, their entries are permanent no-ops
+            # (apply skips absent names, and repool never re-applies them
+            # after a rejoin re-admits same-named PEs at a fresh 0.0
+            # baseline), so a restart must not replay them against the
+            # final pool either. Entries for surviving PEs/links stay —
+            # invalidate below re-applies those symmetrically.
+            dead_pe_names = set(dead_in_pool)
+            dropped_set = set(dropped_links)
+            self.horizon_events = [
+                ev for ev in (
+                    (idx, kind,
+                     {nm: v for nm, v in pe_map.items()
+                      if nm not in dead_pe_names},
+                     {lk: v for lk, v in link_map.items()
+                      if lk not in dropped_set})
+                    for idx, kind, pe_map, link_map in self.horizon_events)
+                if ev[2] or ev[3]]
         if lost or newly_cancelled:
+            # the horizon-event log indexes into the pre-failure history;
+            # re-index it against the surviving record so invalidate's
+            # segmented replay re-applies partition floors between the
+            # same bookings they were applied between live
+            lost_names = set(lost)
+            self.horizon_events = self._remap_horizon_events(
+                eng.assignments, lost_names)
             survivors = eng.invalidate([id_of[nm] for nm in lost],
                                        arrival_floors=floors,
-                                       loc_of=self._loc_of)
+                                       loc_of=self._loc_of,
+                                       events=self.horizon_events)
             fin = eng._finish
             for inst in self.instances:
                 if inst.cancelled:
@@ -443,7 +561,7 @@ class OnlineDriver:
             self._resync_instances()
         else:
             survivors = eng.assignments
-        if dead_in_pool or lost or newly_cancelled:
+        if dead_in_pool or dropped_links or lost or newly_cancelled:
             # only rebind when engine state actually changed: repool and
             # invalidate both re-mark _newly for the fresh selector, but a
             # no-op failure (nothing lost, no pooled PE died) did neither —
@@ -518,18 +636,25 @@ class OnlineDriver:
         if live > self.max_live:
             self.max_live = live
 
-    def shed_pending(self, k: int) -> List[Tuple[PipelineDAG, float]]:
+    def shed_pending(self, k: int, within: Optional[Sequence[str]] = None
+                     ) -> List[Tuple[PipelineDAG, float]]:
         """Shed the ``k`` pending (unadmitted) instances with the largest
         policy arrival floor — under VoS that is the lowest-value SLO
         curve; for every other policy the floor is the arrival time, so
         the latest arrivals go first. Graceful degradation under capacity
         loss: load is dropped before it can starve higher-value admitted
-        work. Returns the shed (dag, arrival) pairs, first-shed first."""
+        work. ``within`` restricts shedding to the named instances
+        (per-site shedding during a partition: only the deferred,
+        far-side-bound set is eligible). Returns the shed (dag, arrival)
+        pairs, first-shed first."""
         if k <= 0 or not self._n_pending:
             return []
         pol = self.policy
         live = [(t, seq, dag) for (t, seq, dag) in self._pending
                 if seq not in self._dead_pending]
+        if within is not None:
+            want = set(within)
+            live = [e for e in live if e[2].name in want]
         live.sort(key=lambda e: (pol.arrival_floor(e[0], e[2]), e[0], e[1]),
                   reverse=True)
         out: List[Tuple[PipelineDAG, float]] = []
@@ -545,11 +670,14 @@ class OnlineDriver:
 
     def rejoin(self, t: float, fragment: ResourcePool
                ) -> Tuple[List[str], List[str]]:
-        """Re-admit returning PEs at time ``t``. ``fragment`` carries the
-        PEs (and any links they bring); PEs still inside their flap
-        quarantine window (:class:`repro.core.recovery.PEBackoff`) are
-        refused. Returns ``(accepted, refused)`` PE names; the pool grows
-        (one repool) iff any PE was accepted."""
+        """Re-admit returning PEs and/or links at time ``t``. ``fragment``
+        carries the PEs and any links they bring; PEs still inside their
+        flap quarantine window (:class:`repro.core.recovery.PEBackoff`)
+        are refused. A fragment may also be *link-only* (no PEs — a WAN
+        uplink healing on its own): links absent from the pool's matrix
+        are re-admitted unconditionally, since quarantine is tracked per
+        PE. Returns ``(accepted, refused)`` PE names; the pool grows (one
+        repool) iff any PE was accepted or any new link arrived."""
         t = float(t)
         in_pool = {p.name for p in self.pool.pes}
         accepted: List[str] = []
@@ -561,13 +689,297 @@ class OnlineDriver:
                 refused.append(p.name)
             else:
                 accepted.append(p.name)
-        if accepted:
+        new_links = [lk for lk in fragment._links
+                     if lk not in self.pool._links]
+        if accepted or new_links:
             keep = set(accepted)
             add = ResourcePool([p for p in fragment.pes if p.name in keep],
                                list(fragment._links.values()),
                                fragment.intra_location_bandwidth)
             self.repool(self.pool.union(add))
         return accepted, refused
+
+    # -- site-level fault domains (WAN partitions, site loss) -----------------
+    def _require_federation(self):
+        fed = self.federation
+        if fed is None:
+            raise ValueError(
+                "site-granularity events need a driver constructed over a "
+                "FederatedPool (e.g. OnlineDriver(paper_federation(), ...))")
+        return fed
+
+    def _live_pending(self) -> List[Tuple[float, int, PipelineDAG]]:
+        return [(t, seq, dag) for (t, seq, dag) in self._pending
+                if seq not in self._dead_pending]
+
+    def _retime_pending(self, new_t_of: Mapping[str, float]) -> List[str]:
+        """Move pending (unadmitted) submissions to new arrival times.
+        Gate floors are recomputed at the shifted arrival — a deferred
+        instance re-enters admission at its *time-shifted* value floor
+        (``-curve.value(new_t)``), not its submission-time floor. Returns
+        the moved instance names."""
+        if not new_t_of:
+            return []
+        moved: List[str] = []
+        for t_arr, seq, dag in self._live_pending():
+            t_new = new_t_of.get(dag.name)
+            if t_new is None or float(t_new) == t_arr:
+                continue
+            t_new = float(t_new)
+            self._dead_pending.add(seq)
+            if self._gate is not None:
+                self._dead_gate.add(seq)
+            heapq.heappush(self._pending, (t_new, self._seq, dag))
+            if self._gate is not None:
+                heapq.heappush(self._gate,
+                               (self.policy.arrival_floor(t_new, dag),
+                                t_new, self._seq, dag))
+            self._seq += 1
+            moved.append(dag.name)
+        self._drain_pending()
+        return moved
+
+    def _apply_event_live(self, kind: str, pe_map: dict,
+                          link_map: dict) -> None:
+        """Apply a horizon event to the live engine, append it to the
+        durable log, and rebuild the selector — floors move candidate
+        keys exactly like a repool does, so the same rebind contract
+        applies."""
+        eng = self.eng
+        eng.apply_horizon_event(kind, pe_map, link_map)
+        self.horizon_events.append(
+            (len(eng.assignments), kind, dict(pe_map), dict(link_map)))
+        eng._newly = list(eng._ready)
+        self.policy.rebind()
+        self._gate = None
+
+    def _remap_horizon_events(self, old: Sequence[Assignment],
+                              lost_names: set) -> List[Tuple[int, str, dict,
+                                                             dict]]:
+        """Re-index the horizon-event log against a surviving history: an
+        event that fired after ``i`` placements fires after the number of
+        *survivors* among those first ``i`` placements."""
+        if not self.horizon_events:
+            return []
+        prefix = [0] * (len(old) + 1)
+        c = 0
+        for i, a in enumerate(old):
+            if a.task not in lost_names:
+                c += 1
+            prefix[i + 1] = c
+        n = len(old)
+        return [(prefix[min(max(int(idx), 0), n)], kind, pe_map, link_map)
+                for idx, kind, pe_map, link_map in self.horizon_events]
+
+    def _site_fragment(self, site: str) -> ResourcePool:
+        """Rejoin fragment for a whole site: its PEs, intra-site links,
+        and its WAN attachments to sites currently up and uncut."""
+        fed = self._require_federation()
+        s = fed.site(site)
+        links = list(s.links)
+        for w in fed.wan:
+            if site not in w.pair:
+                continue
+            other = w.b if w.a == site else w.a
+            if other in self._down_sites or w.pair in self._cut:
+                continue
+            links.extend(fed._expand_wan(w))
+        return ResourcePool(list(s.pes), links, fed.intra_location_bandwidth,
+                            site_of={loc: site for loc in s.locations})
+
+    def partition(self, t: float, site: str, defer: object = (),
+                  shed: object = 0) -> PartitionReport:
+        """A WAN partition isolates ``site`` at time ``t`` — no work is
+        lost, and nothing is cancelled: this is *pricing, not surgery*.
+
+        The site's quarantine deadline (:attr:`site_backoff` — repeat
+        partitions back off exponentially) doubles as the heal estimate:
+        ``pe_free`` of every unreachable-site PE and ``link_free`` of
+        every cut WAN key are monotone-raised to it, so through the
+        existing per-(PE, link) offset heaps the engine (a) keeps placing
+        reachable-site work normally — degraded mode — and (b) defers
+        cross-partition work to the deadline instead of cancelling it.
+        Outputs whose only copies sit on the far side are effectively
+        lost *for consumers across the partition* (any transfer from them
+        prices in the deadline) but stay trusted: :meth:`heal` inside the
+        window restores the floors with no recompute.
+
+        ``defer`` names pending instances (or ``"all"``) to re-time to
+        the deadline — their admission-gate value floors shift with them
+        (see :meth:`_retime_pending`). ``shed`` drops pending instances
+        lowest-value-first, restricted to the deferred (far-side-bound)
+        set when one exists (``"auto"``: proportional to the unreachable
+        PE share).
+
+        The raise is appended to the durable :attr:`horizon_events` log;
+        continuing this driver stays byte-identical to
+        :func:`restart_from_history` with that log (chaos-pinned at site
+        granularity in tests/test_chaos.py)."""
+        fed = self._require_federation()
+        t = float(t)
+        if site not in fed.site_names:
+            raise ValueError(f"unknown site {site!r}")
+        if site in self._partition_saved:
+            raise ValueError(f"site {site!r} is already partitioned")
+        if site in self._down_sites:
+            raise ValueError(f"site {site!r} is down, not partitioned")
+        if site == fed.home:
+            raise ValueError("cannot partition the home site away from "
+                             "itself — partition the far site instead")
+        pairs = fed.wan_pairs_touching(site)
+        deadline = self.site_backoff.record_failure(site, t)
+        self._cut |= pairs
+        reach = fed.reachable(cut=self._cut, down=self._down_sites)
+        unreachable = [s for s in fed.site_names
+                       if s not in reach and s not in self._down_sites]
+        eng = self.eng
+        idx_of = eng._pi.idx_of
+        pe_map: Dict[str, float] = {}
+        pe_saved: Dict[str, Tuple[float, float]] = {}
+        for s in unreachable:
+            for nm in fed.site(s).pe_names:
+                pj = idx_of.get(nm)
+                if pj is not None and deadline > eng._pe_free[pj]:
+                    pe_map[nm] = deadline
+                    pe_saved[nm] = (deadline, eng._pe_free[pj])
+        link_map: Dict[Tuple[str, str], float] = {}
+        link_saved: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        for pr in pairs:
+            a, b = sorted(pr)
+            for lk in fed.wan_keys(a, b):
+                if lk in eng._pi.links:
+                    cur = eng.link_free.get(lk, 0.0)
+                    if deadline > cur:
+                        link_map[lk] = deadline
+                        link_saved[lk] = (deadline, cur)
+        self._apply_event_live("raise", pe_map, link_map)
+        self._partition_saved[site] = {
+            "pairs": pairs, "deadline": deadline,
+            "pe": pe_saved, "link": link_saved,
+        }
+        deferred: List[str] = []
+        if defer:
+            want = None if defer == "all" else {str(x) for x in defer}
+            retime: Dict[str, float] = {}
+            for t_arr, _seq, dag in self._live_pending():
+                if want is not None and dag.name not in want:
+                    continue
+                if t_arr >= deadline:
+                    continue
+                retime[dag.name] = deadline
+                self._deferred_arrivals.setdefault(dag.name, t_arr)
+            deferred = self._retime_pending(retime)
+        if shed == "auto":
+            n_pool = len(self.pool.pes)
+            k = (-(-self._n_pending * len(pe_map) // n_pool)
+                 if pe_map and n_pool else 0)
+        else:
+            k = int(shed)  # type: ignore[call-overload]
+        shed_names = [dag.name for dag, _t in
+                      self.shed_pending(k, within=deferred or None)]
+        rep = PartitionReport(
+            t=t, site=site, deadline=deadline,
+            unreachable=tuple(unreachable), floored_pes=tuple(pe_map),
+            floored_links=tuple(link_map), deferred=tuple(deferred),
+            shed=tuple(shed_names))
+        self.partitions.append(rep)
+        return rep
+
+    def heal(self, t: float, site: str) -> Optional[RecoveryReport]:
+        """The WAN cut isolating ``site`` heals at time ``t``.
+
+        *Within the quarantine window* (``t`` before the partition's
+        deadline): the far side's outputs were never lost, only
+        unreachable — the partition floors are conditionally restored
+        (a horizon something was committed against since the raise is a
+        fact and is kept), deferred pending instances re-time to
+        ``max(original arrival, t)``, and **nothing is recomputed**.
+        Returns None.
+
+        *Past the window* (late heal — the deadline the floors promised
+        expired while the site was still dark): placements made after the
+        deadline assumed a heal that had not happened, so the far side's
+        outputs can no longer be trusted. The floors are restored, then
+        the event escalates to the PR-6 lost-work path
+        (:meth:`fail` with the site's PEs + the cut keys, site-level
+        quarantine only) and the physically-present site immediately
+        rejoins. Returns that :class:`RecoveryReport`."""
+        fed = self._require_federation()
+        t = float(t)
+        saved = self._partition_saved.pop(site, None)
+        if saved is None:
+            raise ValueError(f"site {site!r} is not partitioned")
+        self._cut -= saved["pairs"]
+        trusted = self.site_backoff.quarantined(site, t)
+        if saved["pe"] or saved["link"]:
+            self._apply_event_live("restore", saved["pe"], saved["link"])
+        rep: Optional[RecoveryReport] = None
+        if not trusted:
+            site_pes = [p.name for p in self.pool.pes
+                        if fed.site_of_pe(p.name) == site]
+            keys = [lk for pr in saved["pairs"]
+                    for lk in fed.wan_keys(*sorted(pr))]
+            rep = self.fail(t, pes=site_pes, links=keys, quarantine=False)
+            self.rejoin(t, self._site_fragment(site))
+        retime = {nm: max(orig, t)
+                  for nm, orig in self._deferred_arrivals.items()}
+        self._retime_pending(retime)
+        self._deferred_arrivals.clear()
+        return rep
+
+    def fail_site(self, t: float, site: str,
+                  shed: object = 0) -> RecoveryReport:
+        """The whole site dies at time ``t`` (an edge box loses power, a
+        DC rack drains): every PE of the site leaves the pool and its WAN
+        attachments leave the link matrix (``drop_links`` — unlike a
+        transient link drop, there is nothing left to route to), then the
+        PR-6 lineage pass invalidates in-flight work and outputs whose
+        only live copy sat on the site. Quarantine is tracked at site
+        granularity (:attr:`site_backoff`): a flapping site's rejoin
+        windows grow exponentially, but its individual PEs are not
+        separately quarantined."""
+        fed = self._require_federation()
+        t = float(t)
+        if site not in fed.site_names:
+            raise ValueError(f"unknown site {site!r}")
+        if site == fed.home:
+            raise ValueError("cannot fail the home site (the driver and "
+                             "raw data live there)")
+        if site in self._down_sites:
+            raise ValueError(f"site {site!r} is already down")
+        saved = self._partition_saved.pop(site, None)
+        if saved is not None:
+            # a partitioned site dying outright: the cut dissolves into
+            # the site loss (the partition's floors leave with the site's
+            # PEs/WAN links — fail() scrubs them from the durable
+            # horizon-event log along with the pool)
+            self._cut -= saved["pairs"]
+        self.site_backoff.record_failure(site, t)
+        site_pes = [p.name for p in self.pool.pes
+                    if fed.site_of_pe(p.name) == site]
+        keys = fed.wan_keys_touching(site)
+        rep = self.fail(t, pes=site_pes, links=keys, shed=shed,
+                        quarantine=False, drop_links=True)
+        self._down_sites.add(site)
+        return rep
+
+    def rejoin_site(self, t: float, site: str,
+                    fragment: Optional[ResourcePool] = None
+                    ) -> Tuple[List[str], List[str]]:
+        """Re-admit a lost site at time ``t``: its PEs, intra-site links
+        and WAN attachments (to sites currently up and uncut) return in
+        one repool. Refused wholesale while the site's quarantine window
+        (:attr:`site_backoff`) is open — site flap damping. ``fragment``
+        overrides the default full-site fragment (partial recovery)."""
+        fed = self._require_federation()
+        t = float(t)
+        if site not in self._down_sites:
+            raise ValueError(f"site {site!r} is not down")
+        if self.site_backoff.quarantined(site, t):
+            return [], list(fed.site(site).pe_names)
+        self._down_sites.discard(site)
+        frag = fragment if fragment is not None else self._site_fragment(site)
+        return self.rejoin(t, frag)
 
     def apply_health(self, monitor, now: float) -> Optional[RecoveryReport]:
         """End-to-end :class:`repro.core.elastic.HealthMonitor` wiring.
@@ -640,6 +1052,8 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
                          loc_of: Optional[Mapping[str, str]] = None,
                          retry_floors: Optional[Mapping[str, float]] = None,
                          cancelled: Sequence[str] = (),
+                         horizon_events: Sequence[Tuple[int, str, dict,
+                                                        dict]] = (),
                          **policy_kw) -> OnlineDriver:
     """Rebuild a live driver on ``pool`` from the durable record — the
     restart-from-scratch dual of :meth:`OnlineDriver.repool`.
@@ -667,6 +1081,15 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
     *surviving* assignment record :meth:`OnlineDriver.fail` left behind.
     Continuing the rebuilt driver is byte-identical to continuing the
     failed one — the recovery differential in tests/test_recovery.py.
+
+    After site-granularity events the record also carries
+    ``horizon_events`` (:attr:`OnlineDriver.horizon_events` — the
+    partition raise/restore log, already indexed against ``history``):
+    trusted replay books transfers FIFO, so the floors are re-applied
+    *between* the same bookings they were applied between live
+    (:meth:`OnlineEngine.replay_with_horizons`) — flat replay with floors
+    applied before or after would diverge whenever bookings straddle a
+    partition event.
     """
     drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
     for dag, t in admitted:
@@ -692,7 +1115,12 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
     # tasks' transfer bookings are vacated), so strict recompute-replay
     # would legitimately diverge; for complete histories trusted booking
     # is float-identical to the strict path (see OnlineEngine.replay)
-    drv.eng.replay(history, loc_of, trust=True)
+    if horizon_events:
+        drv.horizon_events = [tuple(e) for e in horizon_events]
+        drv.eng.replay_with_horizons(history, drv.horizon_events, loc_of,
+                                     trust=True)
+    else:
+        drv.eng.replay(history, loc_of, trust=True)
     drv.n_events = len(history)
     # sync instance book-keeping with the replayed placements
     finish = drv.eng._finish

@@ -59,7 +59,7 @@ from typing import (AbstractSet, Callable, Dict, Iterable, List, Mapping,
 
 __all__ = [
     "TaskRecord", "compute_lost", "RetryState", "PEBackoff",
-    "RecoveryReport",
+    "RecoveryReport", "PartitionReport",
 ]
 
 
@@ -236,6 +236,37 @@ class RecoveryReport:
     lost_exec_seconds: float
     #: wall-clock cost of the fail() call itself (recovery latency)
     wall_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class PartitionReport:
+    """Durable record of one :meth:`OnlineDriver.partition` event (a WAN
+    cut isolating a site — no work is lost; cross-partition work is
+    *deferred* by horizon floors until the site's quarantine deadline).
+
+    The matching :meth:`OnlineDriver.heal` either restores the floors
+    (site back within its quarantine window — outputs trusted, nothing
+    recomputed) or, past the window, escalates to the lost-work path.
+    """
+
+    t: float
+    site: str
+    #: quarantine deadline = the heal estimate priced into the floors
+    #: (PEBackoff at site granularity: repeat partitions back off
+    #: exponentially)
+    deadline: float
+    #: sites unreachable from the federation home while this cut holds
+    unreachable: Tuple[str, ...]
+    #: PE names whose ``pe_free`` horizon was raised to the deadline
+    floored_pes: Tuple[str, ...]
+    #: directed link keys whose ``link_free`` horizon was raised
+    floored_links: Tuple[Tuple[str, str], ...]
+    #: pending instance names deferred to the deadline (time-shifted
+    #: arrival — their value-curve floors recompute at the new arrival)
+    deferred: Tuple[str, ...]
+    #: pending instance names shed (lowest value first, within the
+    #: deferred set when one exists)
+    shed: Tuple[str, ...]
 
 
 def lost_exec_seconds(records: Mapping[str, TaskRecord],

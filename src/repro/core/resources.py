@@ -123,11 +123,20 @@ class DirtyHorizons:
 
 
 class ResourcePool:
-    """A set of PEs + location-to-location links (one JITA-4DS VDC view)."""
+    """A set of PEs + location-to-location links (one JITA-4DS VDC view).
+
+    ``site_of`` is optional federation metadata mapping location name →
+    site name (see :mod:`repro.core.federation`). It rides along through
+    :meth:`subset` / :meth:`without` / :meth:`union` but is *not* part of
+    :class:`PoolIndex` — the scheduling engine never reads it, so flat
+    pools and flattened federations index (and therefore schedule)
+    identically.
+    """
 
     def __init__(self, pes: Sequence[ProcessingElement],
                  links: Sequence[Link] = (),
-                 intra_location_bandwidth: float = float("inf")) -> None:
+                 intra_location_bandwidth: float = float("inf"),
+                 site_of: Optional[Dict[str, str]] = None) -> None:
         names = [p.name for p in pes]
         if len(set(names)) != len(names):
             raise ValueError("duplicate PE names")
@@ -137,6 +146,8 @@ class ResourcePool:
         for l in links:
             self._links[(l.src, l.dst)] = l
         self.intra_location_bandwidth = intra_location_bandwidth
+        self.site_of: Optional[Dict[str, str]] = (
+            dict(site_of) if site_of is not None else None)
         self._index: Optional[PoolIndex] = None
 
     # -- lookups --------------------------------------------------------------
@@ -207,7 +218,8 @@ class ResourcePool:
         keep = set(names)
         return ResourcePool([p for p in self.pes if p.name in keep],
                             list(self._links.values()),
-                            self.intra_location_bandwidth)
+                            self.intra_location_bandwidth,
+                            site_of=self.site_of)
 
     def without(self, names: Iterable[str]) -> "ResourcePool":
         """Complement of :meth:`subset`: the pool minus the named PEs (the
@@ -215,13 +227,27 @@ class ResourcePool:
         drop = set(names)
         return ResourcePool([p for p in self.pes if p.name not in drop],
                             list(self._links.values()),
-                            self.intra_location_bandwidth)
+                            self.intra_location_bandwidth,
+                            site_of=self.site_of)
+
+    def without_links(self, keys: Iterable[Tuple[str, str]]) -> "ResourcePool":
+        """The pool minus the named directed links (the WAN-partition shrink
+        primitive — PEs untouched, cross-site channels removed)."""
+        drop = set(keys)
+        return ResourcePool(self.pes,
+                            [l for k, l in self._links.items() if k not in drop],
+                            self.intra_location_bandwidth,
+                            site_of=self.site_of)
 
     def union(self, other: "ResourcePool") -> "ResourcePool":
         links = {**self._links, **other._links}
+        site_of = None
+        if self.site_of is not None or other.site_of is not None:
+            site_of = {**(self.site_of or {}), **(other.site_of or {})}
         return ResourcePool(self.pes + other.pes, list(links.values()),
                             min(self.intra_location_bandwidth,
-                                other.intra_location_bandwidth))
+                                other.intra_location_bandwidth),
+                            site_of=site_of)
 
     def __len__(self) -> int:
         return len(self.pes)

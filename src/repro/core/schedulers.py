@@ -1590,10 +1590,94 @@ class OnlineEngine(_Engine):
                 self._energy_row_ids = row_ids(En, self._erow_seen)
         self._newly = list(self._ready)
 
+    # -- partition floors -----------------------------------------------------
+    def apply_horizon_event(self, kind: str,
+                            pe_map: Mapping[str, object] = {},
+                            link_map: Mapping[Tuple[str, str], object] = {},
+                            ) -> None:
+        """Apply one durable horizon event to the live horizons.
+
+        ``kind == "raise"``: monotone-raise ``pe_free`` / ``link_free`` to
+        the given floors (values are floats). This is how a WAN partition
+        defers cross-partition work without pool surgery: placements on a
+        floored PE (or over a floored link) price in the quarantine
+        deadline through the existing offset sub-heaps — raising a
+        horizon is always safe for cached keys (they stay lower bounds).
+
+        ``kind == "restore"``: conditionally lower them back — values are
+        ``(applied, prev)`` pairs. A horizon still sitting exactly at the
+        applied floor (nothing was booked on top of it) returns to its
+        pre-raise value; one that moved past the floor is a fact — work
+        was committed against it — and is kept.
+
+        Entries naming PEs/links absent from the current pool are skipped
+        (deterministic on both the live and restart paths, which see the
+        same pool). Callers must rebind the policy run afterwards, as for
+        :meth:`repool`: restore *lowers* horizons, which breaks the
+        lower-bound invariant of cached selector keys.
+        """
+        idx_of = self._pi.idx_of
+        loc_id = self._pi.loc_id
+        links = self._pi.links
+        if kind == "raise":
+            for nm, floor in pe_map.items():
+                pj = idx_of.get(nm)
+                if pj is not None and floor > self._pe_free[pj]:
+                    self._pe_free[pj] = floor
+                    self.dirty.bump_pe(pj)
+            for lk, floor in link_map.items():
+                if lk in links and floor > self.link_free.get(lk, 0.0):
+                    self.link_free[lk] = floor
+                    li = loc_id.get(lk[1])
+                    if li is not None:
+                        self.dirty.bump_location(li)
+        elif kind == "restore":
+            for nm, (applied, prev) in pe_map.items():
+                pj = idx_of.get(nm)
+                if pj is not None and self._pe_free[pj] == applied:
+                    self._pe_free[pj] = prev
+                    self.dirty.bump_pe(pj)
+            for lk, (applied, prev) in link_map.items():
+                if lk in links and self.link_free.get(lk, 0.0) == applied:
+                    if prev > 0.0:
+                        self.link_free[lk] = prev
+                    else:
+                        self.link_free.pop(lk, None)
+                    li = loc_id.get(lk[1])
+                    if li is not None:
+                        self.dirty.bump_location(li)
+        else:
+            raise ValueError(f"unknown horizon event kind {kind!r}")
+
+    def replay_with_horizons(self, assignments: Sequence[Assignment],
+                             events: Sequence[Tuple],
+                             loc_of: Optional[Mapping[str, str]] = None,
+                             trust: bool = True) -> None:
+        """Segmented :meth:`replay`: re-apply a placement history with a
+        durable horizon-event log interleaved at its recorded positions.
+
+        ``events`` entries are ``(index, kind, pe_map, link_map)`` where
+        ``index`` counts the assignments placed before the event fired.
+        Trusted replay books transfers FIFO, which makes link horizons
+        order-sensitive — a floor must be applied *between* the same
+        bookings it was applied between live, or replay diverges whenever
+        bookings straddle the event. So: replay ``history[:index]``, apply
+        the event, continue.
+        """
+        i = 0
+        for idx, kind, pe_map, link_map in sorted(events, key=lambda e: e[0]):
+            cut = min(max(int(idx), i), len(assignments))
+            if cut > i:
+                self.replay(assignments[i:cut], loc_of, trust=trust)
+                i = cut
+            self.apply_horizon_event(kind, pe_map, link_map)
+        self.replay(assignments[i:], loc_of, trust=trust)
+
     # -- failure recovery -----------------------------------------------------
     def invalidate(self, lost: Sequence[int],
                    arrival_floors: Optional[Mapping[str, float]] = None,
-                   loc_of: Optional[Mapping[str, str]] = None
+                   loc_of: Optional[Mapping[str, str]] = None,
+                   events: Sequence[Tuple] = (),
                    ) -> List[Assignment]:
         """Un-place the ``lost`` tasks and rebuild live scheduler state
         around the surviving history — the in-place core of
@@ -1611,11 +1695,16 @@ class OnlineEngine(_Engine):
         backoff: recomputation may not be scheduled before the failure it
         recovers from). ``loc_of`` maps PE names absent from the current
         pool to their location so survivors placed on since-removed PEs
-        replay (see :meth:`replay`). Mutates closure-captured structures
-        in place, but callers must still rebind the policy run afterwards
-        (:meth:`_PolicyRun.rebind`) — selector caches hold stale
-        candidates. Returns the surviving assignments (the new durable
-        history, in original placement order)."""
+        replay (see :meth:`replay`). ``events`` is a horizon-event log
+        *already re-indexed against the surviving history* (the caller
+        knows which assignments survived — see
+        ``OnlineDriver._remap_horizon_events``); it is interleaved into
+        the replay via :meth:`replay_with_horizons` so active partition
+        floors survive the reset below. Mutates closure-captured
+        structures in place, but callers must still rebind the policy run
+        afterwards (:meth:`_PolicyRun.rebind`) — selector caches hold
+        stale candidates. Returns the surviving assignments (the new
+        durable history, in original placement order)."""
         di = self._di
         id_of = di.id_of
         lost_set = set(lost)
@@ -1650,7 +1739,10 @@ class OnlineEngine(_Engine):
                 ready_at[tid] = arr[tid]
                 newly.append(tid)
         self._newly = newly
-        self.replay(survivors, loc_of, trust=True)
+        if events:
+            self.replay_with_horizons(survivors, events, loc_of, trust=True)
+        else:
+            self.replay(survivors, loc_of, trust=True)
         return survivors
 
     # -- restart-from-history -------------------------------------------------
@@ -1684,6 +1776,14 @@ class OnlineEngine(_Engine):
         idx_of = self._pi.idx_of
         for a in assignments:
             tid = self._di.id_of[a.task]
+            rehome = loc_of.get(a.task) if loc_of is not None else None
+            if rehome is not None:
+                # a site loss re-homed this output to a copy-holder's
+                # location (OnlineDriver.fail, drop_links); the original
+                # PE's copy is gone even if a PE of that name has since
+                # rejoined, so the override outranks the pool lookup
+                self._replay_ghost(tid, a, rehome)
+                continue
             pj = idx_of.get(a.pe)
             if pj is not None:
                 if trust:

@@ -70,17 +70,62 @@ class AllocationError(RuntimeError):
     pass
 
 
+@dataclasses.dataclass
+class FederatedVDC:
+    """A VDC composed *across* sites: one named mesh part per site.
+
+    The paper's VDC is one mesh; a federated deployment (see
+    :mod:`repro.core.federation`) cannot stretch a single mesh across a
+    WAN, so a cross-site VDC is a set of per-site parts — each an
+    ordinary :class:`VirtualDataCenter` registered as ``"{name}@{site}"``
+    — composed atomically with a per-site availability reserve."""
+
+    name: str
+    parts: Dict[str, VirtualDataCenter]
+
+    @property
+    def n_chips(self) -> int:
+        return sum(p.n_chips for p in self.parts.values())
+
+    @property
+    def sites(self) -> Tuple[str, ...]:
+        return tuple(self.parts)
+
+
 class VDCManager:
-    """Owns the device pool; composes/releases/resizes VDCs."""
+    """Owns the device pool; composes/releases/resizes VDCs.
+
+    ``sites`` registers a federated pool (site name → its devices, in
+    site order) and unlocks :meth:`compose_federated`; plain ``devices``
+    keeps the flat single-site behaviour unchanged."""
 
     #: per-chip sustained power (W) for the energy term of the SLO check
     CHIP_POWER_W = 200.0
 
-    def __init__(self, devices: Optional[Sequence[object]] = None) -> None:
+    def __init__(self, devices: Optional[Sequence[object]] = None,
+                 sites: Optional[Mapping[str, Sequence[object]]] = None
+                 ) -> None:
+        if sites is not None:
+            if devices is not None:
+                raise ValueError("pass devices or sites, not both")
+            self._site_devices: Dict[str, List[object]] = {
+                s: list(ds) for s, ds in sites.items()}
+            devices = [d for ds in self._site_devices.values() for d in ds]
+        else:
+            self._site_devices = {}
         self._pool: List[object] = list(devices if devices is not None
                                         else jax.devices())
         self._free: List[object] = list(self._pool)
+        # site tag per free-list slot, parallel to _free (None when flat).
+        # Tags track *slots*, not identities: test/dry-run pools duplicate
+        # the same device object many times, so id()-based membership
+        # would alias across sites.
+        self._free_tag: List[Optional[str]] = (
+            [s for s, ds in self._site_devices.items() for _ in ds]
+            if self._site_devices else [None] * len(self._pool))
+        self._vdc_tags: Dict[str, List[Optional[str]]] = {}
         self._vdcs: Dict[str, VirtualDataCenter] = {}
+        self._federated: Dict[str, FederatedVDC] = {}
 
     # -- introspection ----------------------------------------------------------
     @property
@@ -140,7 +185,7 @@ class VDCManager:
         count directly (``free - n >= reserve``); chips already allocated to
         other VDCs never count toward the reserve.
         """
-        if name in self._vdcs:
+        if name in self._vdcs or name in self._federated:
             raise AllocationError(f"VDC {name!r} already exists")
         n = int(np.prod(list(axis_shape.values())))
         avail = len(self._free)
@@ -154,7 +199,9 @@ class VDCManager:
         dev_arr = np.array(take, dtype=object).reshape(tuple(axis_shape.values()))
         mesh = jax.sharding.Mesh(dev_arr, tuple(axis_shape.keys()))
         vdc = VirtualDataCenter(name, mesh, tuple(take), slo, predicted)
+        self._vdc_tags[name] = self._free_tag[:n]
         self._free = self._free[n:]
+        self._free_tag = self._free_tag[n:]
         self._vdcs[name] = vdc
         return vdc
 
@@ -168,9 +215,84 @@ class VDCManager:
         return self.compose(name, {"data": data, "model": model_axis},
                             slo=slo, predicted=terms)
 
+    def compose_federated(self, name: str,
+                          site_shapes: Mapping[str, Mapping[str, int]],
+                          slo: Optional[SLO] = None) -> FederatedVDC:
+        """Compose one VDC across sites: ``site_shapes`` maps site name →
+        that site's mesh axis shape (e.g. ``{"edge": {"data": 2},
+        "dc": {"data": 4, "model": 2}}``).
+
+        Atomic with rollback semantics: every part is checked and built
+        against a *working copy* of the free list, and the pool/VDC
+        tables are mutated only after all parts succeeded — a failed
+        compose (unknown site, reserve violation on *any* site) leaves
+        the manager untouched, including parts that had already been
+        carved.
+
+        The availability reserve is enforced **per site**:
+        ``ceil(site_chips · min_availability)`` of each site's own chips
+        must stay free after its part is carved. A site-local reserve is
+        the one that matters in a federation — spare capacity in the DC
+        cannot absorb an edge burst across a 12 Mbps WAN.
+        """
+        if name in self._vdcs or name in self._federated:
+            raise AllocationError(f"VDC {name!r} already exists")
+        if not self._site_devices:
+            raise AllocationError(
+                "compose_federated needs a site registry — construct the "
+                "manager with VDCManager(sites={...})")
+        slo = slo or SLO()
+        new_free = list(self._free)
+        new_tags = list(self._free_tag)
+        parts: Dict[str, VirtualDataCenter] = {}
+        for site, axis_shape in site_shapes.items():
+            if site not in self._site_devices:
+                raise AllocationError(f"unknown site {site!r}")
+            part_name = f"{name}@{site}"
+            if part_name in self._vdcs:
+                raise AllocationError(f"VDC {part_name!r} already exists")
+            n = int(np.prod(list(axis_shape.values())))
+            here = [i for i, tg in enumerate(new_tags) if tg == site]
+            site_total = len(self._site_devices[site])
+            reserve = int(math.ceil(site_total * slo.min_availability))
+            if len(here) - n < reserve:
+                raise AllocationError(
+                    f"site {site!r}: need {n} chips, only {len(here)} "
+                    f"free of {site_total} (per-site availability reserve "
+                    f"{reserve} must stay free)")
+            take_idx = here[:n]
+            take = [new_free[i] for i in take_idx]
+            dev_arr = np.array(take, dtype=object).reshape(
+                tuple(axis_shape.values()))
+            mesh = jax.sharding.Mesh(dev_arr, tuple(axis_shape.keys()))
+            parts[site] = VirtualDataCenter(part_name, mesh, tuple(take),
+                                            slo)
+            for i in reversed(take_idx):
+                del new_free[i]
+                del new_tags[i]
+        # commit
+        self._free = new_free
+        self._free_tag = new_tags
+        fed = FederatedVDC(name, parts)
+        self._federated[name] = fed
+        for site, part in parts.items():
+            self._vdc_tags[part.name] = [site] * part.n_chips
+            self._vdcs[part.name] = part
+        return fed
+
+    def federated(self, name: str) -> FederatedVDC:
+        return self._federated[name]
+
+    def release_federated(self, name: str) -> None:
+        fed = self._federated.pop(name)
+        for part in fed.parts.values():
+            self.release(part.name)
+
     def release(self, name: str) -> None:
         vdc = self._vdcs.pop(name)
         self._free.extend(vdc.devices)
+        self._free_tag.extend(
+            self._vdc_tags.pop(name, [None] * len(vdc.devices)))
 
     def resize(self, name: str, axis_shape: Mapping[str, int]
                ) -> VirtualDataCenter:
@@ -187,6 +309,7 @@ class VDCManager:
         failures).
         """
         old = self._vdcs[name]
+        old_tags = self._vdc_tags.get(name)
         self.release(name)  # appends old.devices at the tail of the free list
         try:
             return self.compose(name, axis_shape, slo=old.slo)
@@ -194,5 +317,8 @@ class VDCManager:
             # compose is atomic, so the free list still ends with exactly
             # old.devices — pop them back off and restore the original VDC
             del self._free[len(self._free) - len(old.devices):]
+            del self._free_tag[len(self._free_tag) - len(old.devices):]
             self._vdcs[name] = old
+            if old_tags is not None:
+                self._vdc_tags[name] = old_tags
             raise

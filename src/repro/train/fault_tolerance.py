@@ -30,7 +30,7 @@ from repro.core.elastic import ElasticPlan, HealthMonitor, plan_remesh
 class FailureEvent:
     step: int
     worker: str
-    kind: str            # "die" | "slow" | "rejoin"
+    kind: str            # "die" | "slow" | "rejoin" | "partition" | "heal"
     factor: float = 1.0  # slowdown multiplier for "slow"
 
 

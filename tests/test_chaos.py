@@ -26,6 +26,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG, Task
+from repro.core.federation import paper_federation
 from repro.core.online import OnlineDriver, restart_from_history
 from repro.core.resources import paper_pool
 from repro.core.schedulers import POLICIES
@@ -208,3 +209,112 @@ def test_chaos_double_failure_differential(seed, k1, k2, policy):
         cancelled=list(drv.cancelled_instances),
     )
     assert sa == _tuples(drv_b.run())
+
+
+def _site_fuzz(seed, policy, n_ops):
+    """Drive a two-site federation through a random legal sequence of
+    site-granularity events (partition / heal / fail_site / rejoin_site),
+    interleaved with placement steps. Returns the driver, the cost model,
+    and whether the last event rebound the policy run (rr's differential
+    is only pinned at rebind points — its PE cycle is positional)."""
+    fed = paper_federation(n_arm=2, n_xeon=2)
+    cost = CostModel(data_home=fed.data_home)
+    drv = OnlineDriver(fed, cost, policy=policy)
+    wl = _template(seed)
+    for i in range(N_INSTANCES):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0)
+    rng = np.random.default_rng(seed + 99)
+    t = 0.0
+    rebound = True
+    for _ in range(n_ops):
+        for _ in range(int(rng.integers(0, 7))):
+            if drv.step() is None and not drv.pending:
+                break
+        if drv.eng.assignments:
+            t = max(t, max(a.start for a in drv.eng.assignments))
+        t += float(rng.uniform(0.1, 40.0))
+        down = "dc" in drv._down_sites
+        cut = "dc" in drv._partition_saved
+        if down:
+            t += float(rng.uniform(0.0, 90.0))
+            acc, _refused = drv.rejoin_site(t, "dc")
+            rebound = bool(acc)
+        elif cut:
+            if rng.random() < 0.7:
+                t += float(rng.uniform(0.0, 80.0))  # within or past window
+                n_ev = len(drv.horizon_events)
+                rep = drv.heal(t, "dc")
+                rebound = rep is not None or len(drv.horizon_events) > n_ev
+            else:
+                drv.fail_site(t, "dc")  # the dark site was actually dead
+                rebound = True
+        else:
+            if rng.random() < 0.6:
+                drv.partition(t, "dc",
+                              defer="all" if rng.random() < 0.5 else (),
+                              shed="auto" if rng.random() < 0.3 else 0)
+            else:
+                drv.fail_site(t, "dc", shed=int(rng.integers(0, 2)))
+            rebound = True
+    return drv, cost, rebound
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_ops=st.integers(min_value=1, max_value=4),
+    policy=st.sampled_from(POLICIES),
+)
+def test_chaos_site_events_differential(seed, n_ops, policy):
+    """Any site-loss / partition / heal sequence: the drain stays
+    byte-identical to ``restart_from_history`` on the reachable
+    sub-topology with the durable record + horizon-event log, and every
+    surviving task is placed exactly once."""
+    drv, cost, rebound = _site_fuzz(seed, policy, n_ops)
+
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    cancelled = list(drv.cancelled_instances)
+    events = list(drv.horizon_events)
+    sched_a = drv.run()
+
+    # exactly-once: no duplicates, every surviving (non-cancelled,
+    # non-shed) task placed, nothing placed that was never submitted
+    names = [a.task for a in sched_a.assignments]
+    assert len(names) == len(set(names))
+    cancelled_set = set(cancelled)
+    must_place = {
+        t.name
+        for inst in drv.instances
+        if inst.name not in cancelled_set
+        for t in inst.dag.tasks
+    }
+    must_place |= {
+        t.name
+        for dag, _t in pending
+        if dag.name not in cancelled_set
+        for t in dag.tasks
+    }
+    all_submitted = {
+        t.name for inst in drv.instances for t in inst.dag.tasks
+    } | {t.name for dag, _t in pending for t in dag.tasks}
+    assert must_place <= set(names) <= all_submitted
+
+    if policy == "rr" and not rebound:
+        return  # rr's positional cycle: differential pinned at rebinds only
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        policy,
+        admitted,
+        history,
+        pending,
+        loc_of,
+        retry_floors=floors,
+        cancelled=cancelled,
+        horizon_events=events,
+    )
+    assert _tuples(sched_a) == _tuples(drv_b.run())

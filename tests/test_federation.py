@@ -1,0 +1,312 @@
+"""Federation topology layer: flatten pins, data gravity, WAN traffic,
+cross-site VDC composition, site-aware pruning.
+
+The load-bearing invariant: the engine is *extended, not forked*. A
+federation's :meth:`FederatedPool.flatten` must schedule byte-identically
+to the equivalent flat pool — for the paper's two-site deployment
+(``paper_federation().flatten()`` vs ``paper_pool()``) and for a
+single-site federation — under every policy, pinned against the frozen
+reference engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.dag import PipelineDAG, Task, merge
+from repro.core.elastic import HealthMonitor, prune_pool
+from repro.core.federation import (WAN_CLASSES, FederatedPool, Site, WANLink,
+                                   paper_federation, wan_traffic)
+from repro.core.online import OnlineDriver
+from repro.core.resources import (BACKEND, FRONTEND, Link, ProcessingElement,
+                                  paper_pool)
+from repro.core.schedulers import POLICIES, Assignment, schedule
+from repro.core.schedulers_reference import schedule_reference
+from repro.pipeline.workloads import ds_workload
+
+
+def _tuples(sched):
+    return [(a.task, a.op, a.pe, a.start, a.finish, a.comm_wait, a.energy)
+            for a in sched.assignments]
+
+
+def _random_dag(seed: int, n: int = 14) -> PipelineDAG:
+    rng = np.random.default_rng(seed)
+    g = PipelineDAG(f"rnd{seed}")
+    ops = ["ingest", "sql_transform", "kmeans", "summarize", "window_agg",
+           "linreg", "anomaly", "export"]
+    for i in range(n):
+        g.add_task(Task(f"t{i}", str(rng.choice(ops)),
+                        work=float(rng.uniform(0.5, 20)),
+                        out_bytes=float(rng.uniform(0, 4e6)),
+                        in_bytes=float(rng.uniform(0, 8e6)) if i < 2 else 0))
+    for i in range(1, n):
+        for j in rng.choice(i, size=min(i, 2), replace=False):
+            g.add_edge(f"t{j}", f"t{i}")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Flatten pins: federation == flat pool, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_paper_federation_flattens_to_paper_pool():
+    flat = paper_federation().flatten()
+    ref = paper_pool()
+    assert [p.name for p in flat.pes] == [p.name for p in ref.pes]
+    assert [p.location for p in flat.pes] == [p.location for p in ref.pes]
+    assert set(flat._links) == set(ref._links)
+    for k, l in ref._links.items():
+        assert flat._links[k].bandwidth == l.bandwidth
+        assert flat._links[k].latency == l.latency
+    assert flat.site_of == {FRONTEND: "edge", BACKEND: "dc"}
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_flatten_byte_identical_to_reference(policy):
+    """Two-site federation vs the frozen seed engine on the flat pool."""
+    merged = merge([ds_workload().instance(i) for i in range(3)])
+    cost = CostModel()
+    live = schedule(merged, paper_federation().flatten(), cost, policy=policy)
+    ref = schedule_reference(merged, paper_pool(), cost, policy=policy)
+    assert _tuples(live) == _tuples(ref)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_single_site_federation_byte_identical(policy, seed):
+    """A one-site topology must stay byte-identical to the flat engine."""
+    flat = paper_pool()
+    fed = FederatedPool(
+        [Site("all", flat.pes, links=tuple(flat._links.values()))])
+    dag = _random_dag(seed)
+    cost = CostModel()
+    live = schedule(dag, fed.flatten(), cost, policy=policy)
+    ref = schedule_reference(dag, flat, cost, policy=policy)
+    assert _tuples(live) == _tuples(ref)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_online_driver_accepts_federation(policy):
+    """OnlineDriver(FederatedPool) drains byte-identically to the flat
+    driver — the site layer adds an event surface, not a second engine."""
+    wl = ds_workload()
+    cost = CostModel()
+    a = OnlineDriver(paper_federation(), cost, policy=policy)
+    b = OnlineDriver(paper_pool(), cost, policy=policy)
+    for i in range(4):
+        a.submit(wl.instance(i), arrival_t=i * 3.0)
+        b.submit(wl.instance(i), arrival_t=i * 3.0)
+    assert _tuples(a.run()) == _tuples(b.run())
+    assert a.federation is not None and b.federation is None
+
+
+def test_federation_validation():
+    pes = [ProcessingElement("a0", "arm", FRONTEND)]
+    with pytest.raises(ValueError, match="duplicate site"):
+        FederatedPool([Site("s", pes), Site("s", [])])
+    with pytest.raises(ValueError, match="at least one site"):
+        FederatedPool([])
+    with pytest.raises(ValueError, match="unknown site"):
+        FederatedPool([Site("s", pes)],
+                      wan=[WANLink("s", "ghost", WAN_CLASSES["lte_4g"])])
+    with pytest.raises(ValueError, match="unknown home"):
+        FederatedPool([Site("s", pes)], home="ghost")
+    with pytest.raises(ValueError, match="appears in sites"):
+        FederatedPool([Site("s", pes),
+                       Site("t", [ProcessingElement("b0", "arm", FRONTEND)])])
+
+
+# ---------------------------------------------------------------------------
+# Reachability / sub-topology
+# ---------------------------------------------------------------------------
+
+def _three_site():
+    mk = lambda nm, kind, loc: ProcessingElement(nm, kind, loc)
+    return FederatedPool(
+        [Site("edge", [mk("arm0", "arm", "loc_e")]),
+         Site("dc", [mk("xeon0", "xeon", "loc_d")]),
+         Site("cloud", [mk("xeon1", "xeon", "loc_c")])],
+        wan=[WANLink("edge", "dc", WAN_CLASSES["lte_4g"]),
+             WANLink("dc", "cloud", WAN_CLASSES["metro_fiber"])],
+        home="edge")
+
+
+def test_reachable_bfs():
+    fed = _three_site()
+    assert fed.reachable() == {"edge", "dc", "cloud"}
+    assert fed.reachable(cut={frozenset(("edge", "dc"))}) == {"edge"}
+    assert fed.reachable(cut={frozenset(("dc", "cloud"))}) == {"edge", "dc"}
+    assert fed.reachable(down={"dc"}) == {"edge"}
+    assert fed.reachable(down={"edge"}) == set()
+
+
+def test_sub_pool_keeps_only_internal_wan():
+    fed = _three_site()
+    sub = fed.sub_pool(["edge", "dc"])
+    assert {p.name for p in sub.pes} == {"arm0", "xeon0"}
+    assert set(sub._links) == {("loc_e", "loc_d"), ("loc_d", "loc_e")}
+    assert sub.site_of == {"loc_e": "edge", "loc_d": "dc"}
+
+
+def test_wan_keys_touching():
+    fed = _three_site()
+    assert set(fed.wan_keys_touching("dc")) == {
+        ("loc_e", "loc_d"), ("loc_d", "loc_e"),
+        ("loc_d", "loc_c"), ("loc_c", "loc_d")}
+    assert fed.wan_pairs_touching("edge") == {frozenset(("edge", "dc"))}
+
+
+# ---------------------------------------------------------------------------
+# Data gravity
+# ---------------------------------------------------------------------------
+
+def test_data_gravity_pins_heavy_source_to_edge():
+    """A source with heavy raw input schedules onto the data-home (edge)
+    site once the cost model prices the WAN upload — and off it when the
+    input is free to move."""
+    fed = paper_federation()
+    flat = fed.flatten()
+    g = PipelineDAG("gravity")
+    g.add_task(Task("src", "ingest", work=2.0, in_bytes=60e6,
+                    out_bytes=1e4))
+    g.add_task(Task("crunch", "kmeans", work=30.0))
+    g.add_edge("src", "crunch")
+    cost = CostModel(data_home=fed.data_home)
+    s = schedule(g, flat, cost, policy="eft")
+    src_pe = flat.pe(s.assignment("src").pe)
+    assert src_pe.location == FRONTEND  # pinned by the 60 MB @12 Mbps upload
+    traffic = wan_traffic(s.assignments, [g], flat, data_home=fed.data_home)
+    assert traffic.upload_bytes == 0.0
+
+    weightless = PipelineDAG("weightless")
+    weightless.add_task(Task("src", "ingest", work=2.0, in_bytes=0.0))
+    weightless.add_task(Task("crunch", "kmeans", work=30.0))
+    weightless.add_edge("src", "crunch")
+    s2 = schedule(weightless, flat, cost, policy="eft")
+    src2 = flat.pe(s2.assignment("src").pe)
+    assert src2.location == BACKEND  # nothing pins it; faster PE wins
+
+
+def test_wan_traffic_tallies():
+    fed = paper_federation()
+    flat = fed.flatten()
+    g = PipelineDAG("w")
+    g.add_task(Task("a", "ingest", work=1.0, in_bytes=2e6, out_bytes=4e6))
+    g.add_task(Task("b", "kmeans", work=1.0, out_bytes=5e5))
+    g.add_task(Task("c", "export", work=1.0))
+    g.add_edge("a", "b")
+    g.add_edge("b", "c")
+    asg = [Assignment("a", "ingest", "arm0", 0, 1, 0, 0),
+           Assignment("b", "kmeans", "xeon0", 1, 2, 0, 0),
+           Assignment("c", "export", "arm1", 2, 3, 0, 0)]
+    t = wan_traffic(asg, [g], flat, data_home=fed.data_home)
+    # a->b crosses edge->dc (4e6), b->c crosses back (5e5); a is at home
+    assert t.bytes_moved == pytest.approx(4.5e6)
+    assert t.crossings == 2
+    assert t.upload_bytes == 0.0
+    # move the source off-home: its 2e6 raw input uploads too
+    asg[0] = Assignment("a", "ingest", "xeon1", 0, 1, 0, 0)
+    t2 = wan_traffic(asg, [g], flat, data_home=fed.data_home)
+    assert t2.upload_bytes == pytest.approx(2e6)
+    assert t2.crossings == 2  # upload + b->c (a->b is now intra-dc)
+    assert t2.bytes_moved == pytest.approx(2e6 + 5e5)
+
+
+# ---------------------------------------------------------------------------
+# Site-aware elastic pruning
+# ---------------------------------------------------------------------------
+
+def test_prune_pool_drops_wan_links_with_last_site_pe():
+    flat = paper_federation().flatten()
+    names = [p.name for p in flat.pes]
+    mon = HealthMonitor(names)
+    for nm in names:
+        if flat.pe(nm).location == BACKEND:
+            mon.mark_dead(nm)
+    pruned = prune_pool(flat, mon)
+    assert all(p.location == FRONTEND for p in pruned.pes)
+    assert pruned._links == {}  # the dc uplink left with the site
+
+
+def test_prune_pool_keeps_wan_links_while_site_alive():
+    flat = paper_federation().flatten()
+    mon = HealthMonitor([p.name for p in flat.pes])
+    mon.mark_dead("xeon0")  # dc loses one PE, not the site
+    pruned = prune_pool(flat, mon)
+    assert set(pruned._links) == set(flat._links)
+
+
+def test_prune_pool_flat_pool_never_drops_links():
+    flat = paper_pool()  # no site_of metadata
+    mon = HealthMonitor([p.name for p in flat.pes])
+    for p in flat.pes:
+        if p.location == BACKEND:
+            mon.mark_dead(p.name)
+    pruned = prune_pool(flat, mon)
+    assert set(pruned._links) == set(flat._links)
+
+
+# ---------------------------------------------------------------------------
+# Cross-site VDC composition
+# ---------------------------------------------------------------------------
+
+def _mgr(edge=4, dc=8, **kw):
+    import jax
+    from repro.core.vdc import VDCManager
+    d = jax.devices()[0]
+    return VDCManager(sites={"edge": [d] * edge, "dc": [d] * dc}, **kw)
+
+
+def test_compose_federated_carves_per_site():
+    mgr = _mgr()
+    fed = mgr.compose_federated(
+        "job", {"edge": {"data": 2}, "dc": {"data": 2, "model": 2}})
+    assert fed.n_chips == 6
+    assert fed.sites == ("edge", "dc")
+    assert mgr.free_chips == 6
+    assert mgr.vdc("job@edge").n_chips == 2
+    assert mgr.vdc("job@dc").axis_sizes == {"data": 2, "model": 2}
+    assert mgr.federated("job") is fed
+
+
+def test_compose_federated_per_site_reserve_is_atomic():
+    from repro.core.vdc import SLO, AllocationError
+    mgr = _mgr(edge=4, dc=8)
+    slo = SLO(min_availability=0.5)  # reserve: 2 edge chips, 4 dc chips
+    # dc part fits (8 free - 4 = 4 reserve ok) but the edge part violates
+    # its own site reserve (4 free - 3 < 2) — nothing may be carved
+    with pytest.raises(AllocationError, match="edge"):
+        mgr.compose_federated(
+            "job", {"dc": {"data": 4}, "edge": {"data": 3}}, slo=slo)
+    assert mgr.free_chips == 12
+    assert mgr.vdcs == []
+    # spare capacity in the dc must not absorb an edge shortfall
+    mgr.compose_federated("ok", {"dc": {"data": 4}, "edge": {"data": 2}},
+                          slo=slo)
+    assert mgr.free_chips == 6
+
+
+def test_compose_federated_release_cycle():
+    from repro.core.vdc import AllocationError
+    mgr = _mgr(edge=2, dc=2)
+    mgr.compose_federated("a", {"edge": {"data": 2}, "dc": {"data": 2}})
+    with pytest.raises(AllocationError):
+        mgr.compose_federated("b", {"edge": {"data": 1}})
+    with pytest.raises(AllocationError, match="already exists"):
+        mgr.compose("a", {"data": 1})  # name collides with the federated VDC
+    mgr.release_federated("a")
+    assert mgr.free_chips == 4
+    # released chips keep their site tags: the same carve fits again
+    fed = mgr.compose_federated("b", {"edge": {"data": 2}, "dc": {"data": 2}})
+    assert fed.n_chips == 4
+
+
+def test_compose_federated_needs_site_registry():
+    import jax
+    from repro.core.vdc import AllocationError, VDCManager
+    mgr = VDCManager(devices=[jax.devices()[0]] * 4)
+    with pytest.raises(AllocationError, match="site registry"):
+        mgr.compose_federated("x", {"edge": {"data": 1}})
+    with pytest.raises(AllocationError, match="unknown site"):
+        _mgr().compose_federated("x", {"mars": {"data": 1}})
