@@ -62,6 +62,105 @@ def _digest(sched) -> str:
 #: that way
 HETERO_MAX_RATIO = 2.0
 
+#: with the runtime sanitizer OFF (the default), the wiring in
+#: schedulers/online may not tax a run by more than this factor over a
+#: bare ``schedule()`` call — the checks must stay strictly opt-in
+SANITIZE_MAX_OFF_RATIO = 1.05
+SANITIZE_N = 300
+
+
+def bench_sanitize(n: int = SANITIZE_N, repeat: int = 3):
+    """Measure the :mod:`repro.core.sanitize` cost at ``n`` (eft policy).
+
+    Three configurations, each best-of-``repeat``:
+
+      * ``plain`` — a bare ``schedule()`` call on the premerged problem
+        (exactly what the main sweep times);
+      * ``off``  — the same problem through ``run_instances`` with
+        ``sanitize=False`` (batch) / the online driver with the sanitizer
+        disabled;
+      * ``on``   — ``sanitize=True``: full invariant checking (batch gets
+        a whole-schedule pass, online checks every placement live).
+
+    Gate: batch *off* must stay within :data:`SANITIZE_MAX_OFF_RATIO` of
+    *plain* — having the sanitizer wired in may not tax default runs.
+    The *on* ratios are recorded, not gated: they are the documented
+    price of ``REPRO_SANITIZE=1``.
+    """
+    from repro.core.cost_model import CostModel
+    from repro.core.resources import paper_pool
+    from repro.core.schedulers import schedule
+    from repro.core.simulator import merge_instances, run_instances
+    from repro.pipeline.workloads import ds_workload
+
+    # an inherited REPRO_SANITIZE=1 (e.g. a sanitized CI job) would turn
+    # the "off" runs on via the env fallback and void the gate — the
+    # explicit flags below are the only sanitize control for this bench
+    saved_env = os.environ.pop("REPRO_SANITIZE", None)
+
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    premerged = merge_instances(wl, n)
+    merged, arrival = premerged[0], premerged[1]
+
+    def best(fn):
+        b = None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            res = fn()
+            dt = time.perf_counter() - t0
+            # run_instances wraps its own timer around the engine; prefer
+            # it so RunResult assembly does not pollute the comparison
+            dt = getattr(res, "wall_seconds", None) or dt
+            if b is None or dt < b:
+                b = dt
+        return b
+
+    try:
+        plain = best(lambda: schedule(merged, pool, cost, policy="eft",
+                                      arrival=arrival))
+        timings = {}
+        for mode, kw in (("batch", {"_premerged": premerged}),
+                         ("online", {"online": True})):
+            off = best(lambda kw=kw: run_instances(
+                wl, pool, cost, policy="eft", n_instances=n,
+                sanitize=False, **kw))
+            on = best(lambda kw=kw: run_instances(
+                wl, pool, cost, policy="eft", n_instances=n,
+                sanitize=True, **kw))
+            timings[mode] = {
+                "off_seconds": round(off, 4),
+                "on_seconds": round(on, 4),
+                "on_ratio": round(on / off, 3) if off > 0 else None,
+            }
+            print(f"sched,sanitize_{mode}_n{n},off {off:.3f}s  "
+                  f"on {on:.3f}s  (x{timings[mode]['on_ratio']})")
+    finally:
+        if saved_env is not None:
+            os.environ["REPRO_SANITIZE"] = saved_env
+
+    failures = []
+    off_b = timings["batch"]["off_seconds"]
+    if plain >= 0.05 and off_b > SANITIZE_MAX_OFF_RATIO * plain:
+        failures.append(
+            f"sanitize-off batch n={n}: {off_b:.3f}s > "
+            f"{SANITIZE_MAX_OFF_RATIO:g}x bare schedule() {plain:.3f}s "
+            f"(sanitizer wiring is taxing default runs)")
+    section = {
+        "meta": {
+            "n": n,
+            "policy": "eft",
+            "repeat": repeat,
+            "max_off_ratio": SANITIZE_MAX_OFF_RATIO,
+            "gate": "batch off_seconds <= max_off_ratio x plain_seconds",
+        },
+        "plain_seconds": round(plain, 4),
+        "batch": timings["batch"],
+        "online": timings["online"],
+    }
+    return section, failures
+
 
 def bench(sizes, policies, repeat: int = 1, check_golden: bool = False):
     from repro.core.cost_model import CostModel
@@ -169,6 +268,11 @@ def main(argv=None) -> int:
     ap.add_argument("--check-golden", action="store_true",
                     help="fail if any schedule diverges from the golden "
                          "digests in tests/golden_sched.json")
+    ap.add_argument("--check-sanitize", action="store_true",
+                    help="time the runtime sanitizer off/on at n=300 (eft, "
+                         "batch + online), gate the off overhead at "
+                         f"{SANITIZE_MAX_OFF_RATIO:g}x, and record a "
+                         "'sanitize' section")
     ap.add_argument("--baseline", default=None,
                     help="existing BENCH_sched.json to gate wall-time "
                          "regressions against")
@@ -184,17 +288,28 @@ def main(argv=None) -> int:
     if args.baseline:
         failures += check_baseline(results, args.baseline,
                                    args.max_regression)
-    payload = {
-        "meta": {
-            "workload": "ds_workload x n on paper_pool",
-            "engine": "incremental (candidate classes + offset sub-heaps)",
-            "timing": "schedule() only; merge recorded in merge_seconds",
-            "sizes": sizes,
-            "merge_seconds": merge_seconds,
-            "total_seconds": round(time.perf_counter() - t0, 1),
-        },
-        "results": results,
+    sanitize_section = None
+    if args.check_sanitize:
+        sanitize_section, san_failures = bench_sanitize()
+        failures += san_failures
+    # BENCH_sched.json is a composite file (bench_online / bench_recovery /
+    # bench_federation merge their own sections in) — update our keys,
+    # never clobber the rest
+    payload = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            payload = json.load(f)
+    payload["meta"] = {
+        "workload": "ds_workload x n on paper_pool",
+        "engine": "incremental (candidate classes + offset sub-heaps)",
+        "timing": "schedule() only; merge recorded in merge_seconds",
+        "sizes": sizes,
+        "merge_seconds": merge_seconds,
+        "total_seconds": round(time.perf_counter() - t0, 1),
     }
+    payload["results"] = results
+    if sanitize_section is not None:
+        payload["sanitize"] = sanitize_section
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")

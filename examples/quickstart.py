@@ -62,7 +62,7 @@ def main() -> None:
     loader = TokenBatchLoader(LoaderConfig(batch_size=8, seq_len=64,
                                            vocab_size=cfg.vocab_size))
     losses = []
-    for i, batch in zip(range(10), loader):
+    for _, batch in zip(range(10), loader, strict=False):
         state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
         losses.append(float(m["loss"]))
     print(f"LM train: loss {losses[0]:.3f} → {losses[-1]:.3f} in 10 steps")

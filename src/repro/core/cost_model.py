@@ -104,7 +104,7 @@ class CostModel:
 
     def __init__(self, rate: Optional[Mapping[str, Mapping[str, float]]] = None,
                  data_home: str = "frontend") -> None:
-        self.rate = {f: dict(r) for f, r in (rate or RATE).items()}
+        self.rate = {f: dict(r) for f, r in (rate or RATE).items()}  # det: ok key-addressed rebuild; caller-order insertion
         #: where raw sensor data lives; source tasks placed elsewhere pay the
         #: upload (paper: data flow starts at the edge).
         self.data_home = data_home

@@ -120,7 +120,7 @@ class PipelineDAG:
         self._version += 1
 
     def chain(self, *names: str) -> None:
-        for a, b in zip(names, names[1:]):
+        for a, b in zip(names, names[1:], strict=False):
             self.add_edge(a, b)
 
     def _reaches(self, a: str, b: str) -> bool:
@@ -162,8 +162,8 @@ class PipelineDAG:
         return [t for t in self.tasks if not self._succ[t.name]]
 
     def topological_order(self) -> List[Task]:
-        indeg = {n: len(p) for n, p in self._pred.items()}
-        queue = [n for n, d in indeg.items() if d == 0]
+        indeg = {n: len(p) for n, p in self._pred.items()}  # det: ok task-insertion order is the topo tie-break contract
+        queue = [n for n, d in indeg.items() if d == 0]  # det: ok task-insertion order is the topo tie-break contract
         out: List[Task] = []
         i = 0
         while i < len(queue):
@@ -219,7 +219,7 @@ class PipelineDAG:
         g = PipelineDAG(name=f"{self.name}#{idx}")
         for t in self.tasks:
             g.add_task(dataclasses.replace(t, name=f"{t.name}#{idx}"))
-        for n, succ in self._succ.items():
+        for n, succ in self._succ.items():  # det: ok edge insertion order mirrors the source DAG's
             for s in succ:
                 g._add_edge_unchecked(f"{n}#{idx}", f"{s}#{idx}")
         return g

@@ -108,7 +108,7 @@ class HealthMonitor:
         self.health[worker].last_heartbeat = now
 
     def _median(self) -> float:
-        ts = [h.ewma_step_s for h in self.health.values()
+        ts = [h.ewma_step_s for h in self.health.values()  # det: ok np.median is order-independent
               if h.alive and h.steps > 0]
         return float(np.median(ts)) if ts else 0.0
 
@@ -117,12 +117,12 @@ class HealthMonitor:
         consecutive *observations*. Strikes are accounted in
         :meth:`observe`; this method is a pure read and can be called any
         number of times between observations."""
-        return [w for w, h in self.health.items()
+        return [w for w, h in self.health.items()  # det: ok registration order is the documented verdict order
                 if h.alive and h.steps > 0
                 and self._strikes[w] >= self.patience]
 
     def dead(self, now: float) -> List[str]:
-        return [w for w, h in self.health.items()
+        return [w for w, h in self.health.items()  # det: ok registration order is the documented verdict order
                 if h.alive and now - h.last_heartbeat > self.heartbeat_timeout]
 
     def sweep_dead(self, now: float) -> List[str]:
@@ -157,7 +157,7 @@ class HealthMonitor:
         self._strikes[worker] = 0
 
     def healthy(self) -> List[str]:
-        return [w for w, h in self.health.items() if h.alive]
+        return [w for w, h in self.health.items() if h.alive]  # det: ok registration order is the documented verdict order
 
 
 def prune_pool(pool, monitor: "HealthMonitor",
@@ -203,7 +203,7 @@ def prune_pool(pool, monitor: "HealthMonitor",
                        if p.location in site_of}
         gone = sites_before - sites_after
         if gone:
-            dead_locs = {loc for loc, s in site_of.items() if s in gone}
+            dead_locs = {loc for loc, s in site_of.items() if s in gone}  # det: ok builds a set; membership only
             drop_keys = [
                 (src, dst) for (src, dst) in pruned._links
                 if (src in dead_locs or dst in dead_locs)

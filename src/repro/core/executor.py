@@ -133,7 +133,7 @@ class Executor:
         outputs: Dict[str, Any] = (dict(resume_from.outputs)
                                    if resume_from else {})
         copies: Dict[str, set] = (
-            {nm: set(cs) for nm, cs in resume_from.copies.items()}
+            {nm: set(cs) for nm, cs in resume_from.copies.items()}  # det: ok key-addressed rebuild of the resume record
             if resume_from else {})
         dead: set = set(resume_from.dead) if resume_from else set()
         # partitions are injector-scoped: a fresh execute() call starts
@@ -153,7 +153,7 @@ class Executor:
                         slow.pop(ev.worker, None)
                         # the PE's copies die with it; an output with no
                         # copy left anywhere is lost (lineage recompute)
-                        for nm, cs in copies.items():
+                        for nm, cs in copies.items():  # det: ok copies insert in execution order (deterministic)
                             cs.discard(ev.worker)
                             if not cs and nm in outputs:
                                 del outputs[nm]
@@ -172,7 +172,7 @@ class Executor:
             task = dag.task(a.task)
             preds = dag.predecessors(task.name)
 
-            def _fetchable(p: Task) -> bool:
+            def _fetchable(p: Task, a=a) -> bool:
                 # an input is usable iff some live copy-holder sits on the
                 # same side of the cut as the consumer (same-side fetch)
                 if p.name not in outputs:
@@ -200,9 +200,13 @@ class Executor:
             runs.append(TaskRun(task.name, task.op, a.pe, kind, dt, out))
             if self.learn_into is not None:
                 self.learn_into.observe(task, self.pool.pe(a.pe), dt)
-        return ExecutionReport(runs, outputs, time.perf_counter() - t_all,
-                               lost=lost, skipped=skipped,
-                               dead=sorted(dead), copies=copies)
+        report = ExecutionReport(runs, outputs, time.perf_counter() - t_all,
+                                 lost=lost, skipped=skipped,
+                                 dead=sorted(dead), copies=copies)
+        from repro.core import sanitize
+        if sanitize.enabled():
+            sanitize.check_execution_report(report, dag)
+        return report
 
 
 def _block(x: Any) -> Any:

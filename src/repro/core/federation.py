@@ -31,6 +31,7 @@ observability half (WAN bytes/crossings of a finished schedule).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .resources import BACKEND, FRONTEND, Link, ProcessingElement, ResourcePool
@@ -122,7 +123,7 @@ class FederatedPool:
     """
 
     def __init__(self, sites: Sequence[Site], wan: Sequence[WANLink] = (),
-                 intra_location_bandwidth: float = float("inf"),
+                 intra_location_bandwidth: float = math.inf,
                  home: Optional[str] = None) -> None:
         names = [s.name for s in sites]
         if len(set(names)) != len(names):
@@ -196,6 +197,9 @@ class FederatedPool:
                 links.extend(self._expand_wan(w))
             self._flat = ResourcePool(
                 pes, links, self.intra_location_bandwidth, site_of=site_of)
+            from repro.core import sanitize
+            if sanitize.enabled():
+                sanitize.validate_pool(self._flat)
         return self._flat
 
     def _expand_wan(self, w: WANLink) -> List[Link]:

@@ -70,6 +70,9 @@ from repro.core.recovery import (PartitionReport, PEBackoff, RecoveryReport,
                                  RetryState, TaskRecord, compute_lost,
                                  lost_exec_seconds)
 from repro.core.resources import ResourcePool
+from repro.core.sanitize import ScheduleSanitizer
+from repro.core.sanitize import enabled as _sanitize_enabled
+from repro.core.sanitize import validate_curve as _validate_curve
 from repro.core.schedulers import (Assignment, OnlineEngine, Schedule,
                                    make_policy_run)
 from repro.core.simulator import RunResult
@@ -131,7 +134,7 @@ class OnlineDriver:
 
     def __init__(self, pool: ResourcePool, cost: Optional[CostModel] = None,
                  policy: str = "eft", contended_links: bool = True,
-                 **policy_kw) -> None:
+                 sanitize: Optional[bool] = None, **policy_kw) -> None:
         #: site topology, when constructed over a
         #: :class:`repro.core.federation.FederatedPool` — the engine always
         #: sees the flattened pool; the federation only informs the
@@ -207,6 +210,11 @@ class OnlineDriver:
         #: pending instances deferred by a partition: name -> original
         #: arrival (heal re-times them to max(original, heal time))
         self._deferred_arrivals: Dict[str, float] = {}
+        #: opt-in runtime invariant checker (``sanitize=True`` or
+        #: ``REPRO_SANITIZE=1``) — validates every placement and every
+        #: recovery event against :mod:`repro.core.sanitize`
+        self.sanitizer: Optional[ScheduleSanitizer] = (
+            ScheduleSanitizer(self) if _sanitize_enabled(sanitize) else None)
 
     # -- submission / admission ----------------------------------------------
     def submit(self, dag: PipelineDAG, arrival_t: float = 0.0,
@@ -226,6 +234,8 @@ class OnlineDriver:
                     f"submit(curve=...) needs the 'vos' policy, not "
                     f"{self.policy_name!r}")
             add(dag, curve)
+        if curve is not None and self.sanitizer is not None:
+            _validate_curve(curve, name=dag.name)
         heapq.heappush(self._pending, (arrival_t, self._seq, dag))
         if self._gate is not None:
             heapq.heappush(self._gate,
@@ -348,6 +358,8 @@ class OnlineDriver:
         tid = self.policy.step()
         self.n_events += 1
         a = eng.assignments[-1]
+        if self.sanitizer is not None:
+            self.sanitizer.after_step(a)
         inst = self.instances[self._inst_of[tid]]
         inst.remaining -= 1
         if a.finish > inst.finish:
@@ -362,7 +374,7 @@ class OnlineDriver:
     def _retire(self, inst: InstanceState) -> None:
         # placed tasks' transfer plans are never consulted again — free the
         # cached tuples so plan-cache memory follows the live set
-        for row in self.eng._plans.values():
+        for row in self.eng._plans.values():  # det: ok in-place row reset; order-free
             for tid in range(inst.first_tid, inst.first_tid + inst.n_tasks):
                 row[tid] = None
 
@@ -371,6 +383,8 @@ class OnlineDriver:
         while True:
             if self.step() is None and not self._n_pending:
                 break
+        if self.sanitizer is not None:
+            self.sanitizer.validate_final()
         return self.schedule()
 
     # -- elastic re-plan ------------------------------------------------------
@@ -390,6 +404,8 @@ class OnlineDriver:
         self.eng.repool(new_pool)
         self.policy.rebind()
         self._gate = None
+        if self.sanitizer is not None:
+            self.sanitizer.resync("repool")
 
     # -- failure recovery -----------------------------------------------------
     def fail(self, t: float, pes: Sequence[str] = (),
@@ -448,6 +464,12 @@ class OnlineDriver:
             lambda nm: [names[s] for s in di.succs[id_of[nm]]],
             lambda nm: [names[p] for p in di.preds[id_of[nm]]],
             dead_set, t, extra_lost=victims, cancelled=cancelled_names)
+        if self.sanitizer is not None:
+            self.sanitizer.check_fail(
+                records, lost,
+                lambda nm: [names[s] for s in di.succs[id_of[nm]]],
+                lambda nm: [names[p] for p in di.preds[id_of[nm]]],
+                dead_set, t, extra_lost=victims, cancelled=cancelled_names)
         lost_secs = lost_exec_seconds(records, lost, t)
         lost_set = set(lost)
         # an invalidated task's output no longer exists anywhere: drop any
@@ -475,7 +497,7 @@ class OnlineDriver:
         # them on the fresh matrix either
         live_loc = next((p.location for p in self.pool.pes
                          if p.name not in dead_set), None)
-        for nm, r in records.items():
+        for nm, r in records.items():  # det: ok independent per-task re-home; records keep placement order
             if nm in lost_set or r.pe not in dead_set:
                 continue
             # an earlier fail's override (task-name key) stays put unless
@@ -501,7 +523,7 @@ class OnlineDriver:
             eng._plans = {}  # cached plans priced the old location
         # retry accounting: charge every lost task one attempt
         floors, exhausted = self.retry.charge(lost, t)
-        for nm, fl in floors.items():
+        for nm, fl in floors.items():  # det: ok independent per-task max; order-free
             if fl > self.retry_floors.get(nm, float("-inf")):
                 self.retry_floors[nm] = fl
         newly_cancelled: List[str] = []
@@ -534,9 +556,9 @@ class OnlineDriver:
             self.horizon_events = [
                 ev for ev in (
                     (idx, kind,
-                     {nm: v for nm, v in pe_map.items()
+                     {nm: v for nm, v in pe_map.items()  # det: ok filter keeps recorded event order
                       if nm not in dead_pe_names},
-                     {lk: v for lk, v in link_map.items()
+                     {lk: v for lk, v in link_map.items()  # det: ok filter keeps recorded event order
                       if lk not in dropped_set})
                     for idx, kind, pe_map, link_map in self.horizon_events)
                 if ev[2] or ev[3]]
@@ -581,6 +603,9 @@ class OnlineDriver:
             lost_exec_seconds=lost_secs,
             wall_seconds=time.perf_counter() - t0)
         self.recoveries.append(report)
+        if self.sanitizer is not None:
+            self.sanitizer.resync("fail")
+            self.sanitizer.check_overrides()
         return report
 
     def _link_victims(self, t: float, dead_links: set) -> set:
@@ -752,6 +777,8 @@ class OnlineDriver:
         eng._newly = list(eng._ready)
         self.policy.rebind()
         self._gate = None
+        if self.sanitizer is not None:
+            self.sanitizer.on_horizon_event(kind, pe_map, link_map)
 
     def _remap_horizon_events(self, old: Sequence[Assignment],
                               lost_names: set) -> List[Tuple[int, str, dict,
@@ -922,7 +949,7 @@ class OnlineDriver:
             rep = self.fail(t, pes=site_pes, links=keys, quarantine=False)
             self.rejoin(t, self._site_fragment(site))
         retime = {nm: max(orig, t)
-                  for nm, orig in self._deferred_arrivals.items()}
+                  for nm, orig in self._deferred_arrivals.items()}  # det: ok key-addressed rebuild; admission order
         self._retime_pending(retime)
         self._deferred_arrivals.clear()
         return rep
@@ -1097,7 +1124,7 @@ def restart_from_history(pool: ResourcePool, cost: Optional[CostModel],
     eng = drv.eng
     if retry_floors:
         id_of = eng._di.id_of
-        for nm, fl in retry_floors.items():
+        for nm, fl in retry_floors.items():  # det: ok independent per-task floor raise; order-free
             eng.raise_arrival(id_of[nm], fl)
         drv.retry_floors = dict(retry_floors)
     cancelled_set = set(cancelled)

@@ -96,13 +96,13 @@ def compute_lost(records: Mapping[str, TaskRecord],
     (deterministic given an ordered mapping).
     """
     lost = {nm for nm in extra_lost if nm in records}
-    for nm, r in records.items():
+    for nm, r in records.items():  # det: ok records order is the documented return-order contract
         if r.pe in dead_pes and r.finish > t:
             lost.add(nm)
     changed = True
     while changed:
         changed = False
-        for nm, r in records.items():
+        for nm, r in records.items():  # det: ok fixpoint over a placement-ordered mapping
             if nm in lost:
                 continue
             # rule 3: inputs never arrived
@@ -140,7 +140,15 @@ def compute_lost(records: Mapping[str, TaskRecord],
             if not has_copy:
                 lost.add(nm)
                 changed = True
-    return [nm for nm in records if nm in lost]
+    out = [nm for nm in records if nm in lost]
+    from repro.core import sanitize
+    if sanitize.enabled():
+        # self-check: the fixpoint must be sound and closed (no survivor
+        # violates a rule, no task was invalidated without justification)
+        sanitize.check_lost_closure(records, out, succs_of, preds_of,
+                                    dead_pes, t, extra_lost=set(extra_lost),
+                                    cancelled=set(cancelled))
+    return out
 
 
 class RetryState:

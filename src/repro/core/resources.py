@@ -16,6 +16,7 @@ change (see repro.core.cost_model.tpu_pool / paper_pool).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 FRONTEND = "frontend"
@@ -135,7 +136,7 @@ class ResourcePool:
 
     def __init__(self, pes: Sequence[ProcessingElement],
                  links: Sequence[Link] = (),
-                 intra_location_bandwidth: float = float("inf"),
+                 intra_location_bandwidth: float = math.inf,
                  site_of: Optional[Dict[str, str]] = None) -> None:
         names = [p.name for p in pes]
         if len(set(names)) != len(names):
@@ -191,6 +192,25 @@ class ResourcePool:
             raise KeyError(f"no link {src!r}->{dst!r}")
         return link.transfer_time(nbytes)
 
+    def validate(self) -> None:
+        """Structural invariants: unique PE names, positive speeds, sane
+        link parameters. Raises :class:`ValueError` — the sanitizer
+        (:func:`repro.core.sanitize.validate_pool`) wraps this into its
+        typed error; callers building pools by hand can use it directly."""
+        seen: set = set()
+        for p in self.pes:
+            if p.name in seen:
+                raise ValueError(f"duplicate PE name {p.name!r} in pool")
+            seen.add(p.name)
+            if p.speed <= 0:
+                raise ValueError(f"PE {p.name!r} has speed {p.speed}")
+        for key in sorted(self._links):
+            link = self._links[key]
+            if link.bandwidth <= 0:
+                raise ValueError(f"link {key} has bandwidth {link.bandwidth}")
+            if link.latency < 0:
+                raise ValueError(f"link {key} has latency {link.latency}")
+
     def index(self) -> PoolIndex:
         """Int-id snapshot for the scheduling engine (cached; the PE list and
         link matrix are effectively immutable after construction)."""
@@ -235,7 +255,7 @@ class ResourcePool:
         primitive — PEs untouched, cross-site channels removed)."""
         drop = set(keys)
         return ResourcePool(self.pes,
-                            [l for k, l in self._links.items() if k not in drop],
+                            [l for k, l in self._links.items() if k not in drop],  # det: ok links keep pool construction order
                             self.intra_location_bandwidth,
                             site_of=self.site_of)
 
@@ -257,7 +277,7 @@ class ResourcePool:
         for loc in self.locations:
             kinds = [p.kind for p in self.by_location(loc)]
             counts = {k: kinds.count(k) for k in dict.fromkeys(kinds)}
-            parts.append(f"{loc}[" + ",".join(f"{v}x{k}" for k, v in counts.items()) + "]")
+            parts.append(f"{loc}[" + ",".join(f"{v}x{k}" for k, v in counts.items()) + "]")  # det: ok repr only
         return "+".join(parts)
 
 

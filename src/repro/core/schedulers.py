@@ -240,12 +240,12 @@ class Schedule:
         mk = self.makespan
         if mk <= 0:
             return {p.name: 0.0 for p in self.pool.pes}
-        return {n: b / mk for n, b in self.busy_time(include_comm).items()}
+        return {n: b / mk for n, b in self.busy_time(include_comm).items()}  # det: ok key-addressed rebuild in pool order
 
     @property
     def mean_utilization(self) -> float:
         u = self.utilization()
-        return sum(u.values()) / max(len(u), 1)
+        return sum(u.values()) / max(len(u), 1)  # det: ok pool-order values; fixed operand order
 
     @property
     def total_energy(self) -> float:
@@ -1196,7 +1196,7 @@ class _ClassedBest:
                     demoted[cls.cid] = cls
         for cls in created:
             self._push_class(cls)
-        for cls in demoted.values():
+        for cls in demoted.values():  # det: ok class-insertion order; heap keys are a total order
             cls.gen += 1
             self._push_class(cls)
 
@@ -1508,7 +1508,7 @@ class OnlineEngine(_Engine):
         self._placed_loc.extend([None] * n_new)
         self._ready_at.extend([None] * n_new)
         self._n_preds_left.extend(len(row) for row in idx.preds)
-        for row in self._plans.values():
+        for row in self._plans.values():  # det: ok in-place row extension; order-free
             row.extend([None] * n_new)
         if self._exec_tbl is not None:
             E = self.cost.exec_time_batch(idx.tasks, self._pi.pes)
@@ -1563,7 +1563,7 @@ class OnlineEngine(_Engine):
         # data-home upload link when every data-home PE was removed); drop
         # only links that vanished from the matrix itself
         new_links = new_pi.links
-        self.link_free = {lk: v for lk, v in self.link_free.items()
+        self.link_free = {lk: v for lk, v in self.link_free.items()  # det: ok key-addressed filter; bookings read via .get
                           if lk in new_links}
         self._plans = {}
         self.dirty = DirtyHorizons(new_pi)
@@ -1592,8 +1592,9 @@ class OnlineEngine(_Engine):
 
     # -- partition floors -----------------------------------------------------
     def apply_horizon_event(self, kind: str,
-                            pe_map: Mapping[str, object] = {},
-                            link_map: Mapping[Tuple[str, str], object] = {},
+                            pe_map: Optional[Mapping[str, object]] = None,
+                            link_map: Optional[Mapping[Tuple[str, str],
+                                                       object]] = None,
                             ) -> None:
         """Apply one durable horizon event to the live horizons.
 
@@ -1616,28 +1617,30 @@ class OnlineEngine(_Engine):
         :meth:`repool`: restore *lowers* horizons, which breaks the
         lower-bound invariant of cached selector keys.
         """
+        pe_map = pe_map or {}
+        link_map = link_map or {}
         idx_of = self._pi.idx_of
         loc_id = self._pi.loc_id
         links = self._pi.links
         if kind == "raise":
-            for nm, floor in pe_map.items():
+            for nm, floor in pe_map.items():  # det: ok per-key monotone raise; order-free
                 pj = idx_of.get(nm)
                 if pj is not None and floor > self._pe_free[pj]:
                     self._pe_free[pj] = floor
                     self.dirty.bump_pe(pj)
-            for lk, floor in link_map.items():
+            for lk, floor in link_map.items():  # det: ok per-key monotone raise; order-free
                 if lk in links and floor > self.link_free.get(lk, 0.0):
                     self.link_free[lk] = floor
                     li = loc_id.get(lk[1])
                     if li is not None:
                         self.dirty.bump_location(li)
         elif kind == "restore":
-            for nm, (applied, prev) in pe_map.items():
+            for nm, (applied, prev) in pe_map.items():  # det: ok per-key conditional restore; order-free
                 pj = idx_of.get(nm)
                 if pj is not None and self._pe_free[pj] == applied:
                     self._pe_free[pj] = prev
                     self.dirty.bump_pe(pj)
-            for lk, (applied, prev) in link_map.items():
+            for lk, (applied, prev) in link_map.items():  # det: ok per-key conditional restore; order-free
                 if lk in links and self.link_free.get(lk, 0.0) == applied:
                     if prev > 0.0:
                         self.link_free[lk] = prev
@@ -1711,13 +1714,13 @@ class OnlineEngine(_Engine):
         survivors = [a for a in self.assignments
                      if id_of[a.task] not in lost_set]
         if arrival_floors:
-            for nm, fl in arrival_floors.items():
+            for nm, fl in arrival_floors.items():  # det: ok independent per-task floor raise; order-free
                 self.raise_arrival(id_of[nm], fl)
         # full in-place reset of mutable placement state
         n = len(di.names)
         self._pe_free[:] = [0.0] * self.n_pes
         self.link_free.clear()
-        for row in self._plans.values():
+        for row in self._plans.values():  # det: ok in-place row reset; order-free
             row[:] = [None] * n
         self.dirty = DirtyHorizons(self._pi)
         self.assignments = []
@@ -2169,7 +2172,7 @@ class _VosRun(_ClassedRun):
         #: append-only, closures bind the list object
         self._task_curves: List[Optional[ValueCurve]] = []
         self._neg_ew = any((c.energy_weight or 0.0) < 0
-                           for c in self.curves.values())
+                           for c in self.curves.values())  # det: ok any(): order-free
         if default_curve is not None and (default_curve.energy_weight
                                           or 0.0) < 0:
             self._neg_ew = True
@@ -2251,7 +2254,7 @@ class _VosRun(_ClassedRun):
             # usable bound; otherwise admit unconditionally
             return -c.value(t) if c is not None else float("-inf")
         best = None
-        for inst in {instance_id(nm) for nm in dag.index().names}:
+        for inst in sorted({instance_id(nm) for nm in dag.index().names}):
             c = self.curves.get(inst, self.default_curve)
             if c is None:
                 if self._pool_default[0] is None:
@@ -2569,6 +2572,23 @@ class _HeftRun(_PolicyRun):
             if best is None or key < best[:2]:
                 best = (*key, pj, s)
         pj, s = best[2], best[3]
+        # the candidate gap was sized with the transfer stall estimated at
+        # the FIFO probe point; the stall realised at the inserted position
+        # can be larger (link contention earlier in time), overflowing the
+        # gap into the next slot — a double-booked PE. Re-derive the
+        # realised duration at the chosen start and re-search until the
+        # slot fits (the stall is non-increasing in the start time, so
+        # each conflict strictly advances the start and the loop
+        # terminates at the tail).
+        st = starts[pj]
+        while True:
+            dur_act = (eng._exec_start_i(tid, pj, s) - s
+                       + eng._exec(tid, pj))
+            k = bisect.bisect_right(st, s)
+            if k == len(st) or s + dur_act <= st[k]:
+                break
+            s = self._insertion_start(st, fins[pj], prefmax[pj],
+                                      ready_t, dur_act)
         a = eng._place_i(tid, pj, start=s)
         # insert the realised slot, keeping (start, finish) order and the
         # finish prefix-max in sync
@@ -2606,7 +2626,8 @@ def make_policy_run(policy: str, eng: _Engine, **kw) -> _PolicyRun:
         cls = _POLICY_RUNS[policy]
     except KeyError:
         raise ValueError(
-            f"unknown policy {policy!r}; one of {sorted(_POLICY_RUNS)}")
+            f"unknown policy {policy!r}; one of "
+            f"{sorted(_POLICY_RUNS)}") from None
     return cls(eng, **kw)
 
 
@@ -2617,7 +2638,12 @@ def _run_batch(policy: str, dag: PipelineDAG, pool: ResourcePool,
     run = make_policy_run(policy, eng, **kw)
     run.on_admit(dag)
     run.run()
-    return eng.schedule_obj(policy)
+    sched = eng.schedule_obj(policy)
+    from repro.core import sanitize
+    if sanitize.enabled():
+        sanitize.validate_schedule(sched, dag, cost, arrival,
+                                   curves=kw.get("curves"))
+    return sched
 
 
 def schedule_rr(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
@@ -2723,5 +2749,6 @@ def schedule(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     try:
         fn = SCHEDULERS[policy]
     except KeyError:
-        raise ValueError(f"unknown policy {policy!r}; one of {sorted(SCHEDULERS)}")
+        raise ValueError(f"unknown policy {policy!r}; one of "
+                         f"{sorted(SCHEDULERS)}") from None
     return fn(dag, pool, cost, arrival, **kw)

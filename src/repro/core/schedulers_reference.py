@@ -75,7 +75,7 @@ class _ReferenceEngine:
         start = max(avail, self.link_free.get(key, 0.0))
         arrive = start + dur
         if book:
-            self.link_free[key] = arrive
+            self.link_free[key] = arrive  # det: ok frozen reference engine's own mutator
         return arrive
 
     # -- timing queries -------------------------------------------------------
@@ -118,7 +118,7 @@ class _ReferenceEngine:
                        comm_wait=xstart - hold,
                        energy=self.cost.energy(task, pe))
         self.assignments.append(a)
-        self.pe_free[pe.name] = max(self.pe_free[pe.name], f)
+        self.pe_free[pe.name] = max(self.pe_free[pe.name], f)  # det: ok frozen reference engine's own mutator
         self.finish[task.name] = f
         self.placed[task.name] = pe
         self._ready.remove(task.name)
@@ -218,7 +218,7 @@ def schedule_minmin(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
     while not eng.done():
         best = None
         for task in eng.ready:
-            pe_best = min(pool.pes, key=lambda p: eng.eft(task, p))
+            pe_best = min(pool.pes, key=lambda p, t=task: eng.eft(t, p))
             key = (eng.eft(task, pe_best), task.name)
             if best is None or key < best[:2]:
                 best = (*key, task, pe_best)
@@ -259,6 +259,15 @@ def schedule_heft(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
             if best is None or key < best[:2]:
                 best = (*key, pe, s)
         pe, s = best[2], best[3]
+        # re-derive the stall at the inserted position and re-search until
+        # the realised slot fits its gap (mirrors the incremental engine)
+        while True:
+            dur_act = (eng.exec_start(task, pe, s) - s
+                       + cost.exec_time(task, pe))
+            nxt = next((ss for (ss, _f) in slots[pe.name] if ss > s), None)
+            if nxt is None or s + dur_act <= nxt:
+                break
+            s = insertion_start(pe, ready_t, dur_act)
         if task.name not in eng._ready:
             eng._ready.append(task.name)
         a = eng.place(task, pe, start=s)
@@ -340,5 +349,6 @@ def schedule_reference(dag: PipelineDAG, pool: ResourcePool, cost: CostModel,
         fn = REFERENCE_SCHEDULERS[policy]
     except KeyError:
         raise ValueError(
-            f"unknown policy {policy!r}; one of {sorted(REFERENCE_SCHEDULERS)}")
+            f"unknown policy {policy!r}; one of "
+            f"{sorted(REFERENCE_SCHEDULERS)}") from None
     return fn(dag, pool, cost, arrival, **kw)

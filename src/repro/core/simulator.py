@@ -86,7 +86,7 @@ def merge_instances(workload: PipelineDAG, n_instances: int,
 def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
                   policy: str = "eft", n_instances: int = 100,
                   period: float = 0.0, label: str = "",
-                  online: bool = False,
+                  online: bool = False, sanitize: Optional[bool] = None,
                   _premerged: Optional[Tuple] = None,
                   **policy_kw) -> RunResult:
     """Submit ``n_instances`` copies of ``workload`` (all at once, or one
@@ -108,7 +108,11 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
     (:func:`repro.core.online.run_online`): instances are admitted into a
     live engine as they arrive instead of merged up front — byte-identical
     schedules, per-event cost independent of ``n_instances``, and the extra
-    telemetry of :class:`repro.core.online.OnlineRunResult`."""
+    telemetry of :class:`repro.core.online.OnlineRunResult`.
+
+    ``sanitize=True`` (or ``REPRO_SANITIZE=1``) validates the emitted
+    schedule against :mod:`repro.core.sanitize` — online runs check every
+    placement as it happens, batch runs get a whole-schedule pass."""
     if _premerged is not None and len(_premerged) > 2 and _premerged[2] \
             and policy == "vos":
         policy_kw.setdefault("curves", _premerged[2])
@@ -116,7 +120,7 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
         from repro.core.online import run_online
         return run_online(workload, pool, cost, policy=policy,
                           n_instances=n_instances, period=period, label=label,
-                          **policy_kw)
+                          sanitize=sanitize, **policy_kw)
     t0 = time.perf_counter()
     if _premerged is not None:
         merged, arrival = _premerged[0], _premerged[1]
@@ -124,6 +128,11 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
         merged, arrival, _ = merge_instances(workload, n_instances, period)
     sched = schedule(merged, pool, cost, policy=policy, arrival=arrival,
                      **policy_kw)
+    from repro.core import sanitize as _sanitize
+    if _sanitize.enabled(sanitize) and not _sanitize.enabled(None):
+        # env-enabled runs were already validated inside the engine
+        _sanitize.validate_schedule(sched, merged, cost, arrival,
+                                    curves=policy_kw.get("curves"))
     return RunResult(label or pool.describe(), policy, sched.makespan,
                      sched.mean_utilization, sched.total_energy,
                      sched.location_split(), sched,

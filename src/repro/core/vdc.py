@@ -57,7 +57,8 @@ class VirtualDataCenter:
 
     @property
     def axis_sizes(self) -> Dict[str, int]:
-        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape,
+                        strict=True))
 
     def __enter__(self):
         return self.mesh.__enter__()
@@ -85,7 +86,7 @@ class FederatedVDC:
 
     @property
     def n_chips(self) -> int:
-        return sum(p.n_chips for p in self.parts.values())
+        return sum(p.n_chips for p in self.parts.values())  # det: ok integer chip counts; sum order-free
 
     @property
     def sites(self) -> Tuple[str, ...]:
@@ -109,8 +110,8 @@ class VDCManager:
             if devices is not None:
                 raise ValueError("pass devices or sites, not both")
             self._site_devices: Dict[str, List[object]] = {
-                s: list(ds) for s, ds in sites.items()}
-            devices = [d for ds in self._site_devices.values() for d in ds]
+                s: list(ds) for s, ds in sites.items()}  # det: ok caller's site order is the device-pool order contract
+            devices = [d for ds in self._site_devices.values() for d in ds]  # det: ok caller's site order is the device-pool order contract
         else:
             self._site_devices = {}
         self._pool: List[object] = list(devices if devices is not None
@@ -121,7 +122,7 @@ class VDCManager:
         # the same device object many times, so id()-based membership
         # would alias across sites.
         self._free_tag: List[Optional[str]] = (
-            [s for s, ds in self._site_devices.items() for _ in ds]
+            [s for s, ds in self._site_devices.items() for _ in ds]  # det: ok caller's site order is the device-pool order contract
             if self._site_devices else [None] * len(self._pool))
         self._vdc_tags: Dict[str, List[Optional[str]]] = {}
         self._vdcs: Dict[str, VirtualDataCenter] = {}
@@ -245,7 +246,7 @@ class VDCManager:
         new_free = list(self._free)
         new_tags = list(self._free_tag)
         parts: Dict[str, VirtualDataCenter] = {}
-        for site, axis_shape in site_shapes.items():
+        for site, axis_shape in site_shapes.items():  # det: ok allocation follows caller's site order
             if site not in self._site_devices:
                 raise AllocationError(f"unknown site {site!r}")
             part_name = f"{name}@{site}"
@@ -275,7 +276,7 @@ class VDCManager:
         self._free_tag = new_tags
         fed = FederatedVDC(name, parts)
         self._federated[name] = fed
-        for site, part in parts.items():
+        for site, part in parts.items():  # det: ok key-addressed bookkeeping
             self._vdc_tags[part.name] = [site] * part.n_chips
             self._vdcs[part.name] = part
         return fed
@@ -285,7 +286,7 @@ class VDCManager:
 
     def release_federated(self, name: str) -> None:
         fed = self._federated.pop(name)
-        for part in fed.parts.values():
+        for part in fed.parts.values():  # det: ok release order = compose order (deterministic)
             self.release(part.name)
 
     def release(self, name: str) -> None:

@@ -285,7 +285,7 @@ def system_vos(schedule: "Schedule", specs: Mapping[str, object],
         finish[inst] = max(finish.get(inst, 0.0), a.finish)
         energy[inst] = energy.get(inst, 0.0) + a.energy
     total = 0.0
-    for inst, f in finish.items():
+    for inst, f in finish.items():  # det: ok finish dict in assignment order; fixed operand order
         spec = specs.get(inst)
         if spec is None:
             if strict:

@@ -49,7 +49,7 @@ class MessageBroker:
 
     def publish(self, topic: str, batch: StreamBatch) -> None:
         self.published_bytes[topic] += batch.nbytes
-        for q in self._queues[topic].values():
+        for q in self._queues[topic].values():  # det: ok independent per-subscriber queues; order-free
             q.append(batch)
 
     def drain(self, topic: str, subscriber: str) -> List[StreamBatch]:

@@ -55,7 +55,8 @@ class ShardingRules:
         self.notes = notes
         self.options = dict(options or {})
         self.axis_size = dict(zip(mesh.axis_names,
-                                  (int(s) for s in mesh.devices.shape)))
+                                  (int(s) for s in mesh.devices.shape),
+                                  strict=True))
 
     def _extent(self, rule: Rule) -> int:
         if rule is None:
@@ -88,7 +89,7 @@ class ShardingRules:
             raise ValueError(f"rank mismatch: {logical_axes} vs shape {shape}")
         used: set = set()
         out: List[Rule] = []
-        for name, dim in zip(logical_axes, shape):
+        for name, dim in zip(logical_axes, shape, strict=True):
             r = self.dim_rule(name, int(dim))
             # a mesh axis may appear at most once in a PartitionSpec
             flat = (r,) if isinstance(r, str) else (r or ())
@@ -166,7 +167,8 @@ def strategy_for(cfg: ModelConfig, mesh: Mesh, *,
     names = mesh.axis_names
     tp_axis = "model" if "model" in names else None
     dp: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in names)
-    size = dict(zip(names, (int(s) for s in mesh.devices.shape)))
+    size = dict(zip(names, (int(s) for s in mesh.devices.shape),
+                    strict=True))
     tp = size.get("model", 1)
 
     notes: List[str] = []

@@ -259,7 +259,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
                               - per_dev["alias_bytes"])
     colls = {k: {"count": v.count, "ici_bytes": v.wire_bytes_ici,
                  "dcn_bytes": v.wire_bytes_dcn}
-             for k, v in hlo.collectives.items()}
+             for k, v in sorted(hlo.collectives.items())}
 
     # roofline terms (per-step seconds)
     compute_s = hlo.dot_flops / PEAK_FLOPS            # per-device flops

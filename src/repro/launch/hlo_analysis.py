@@ -68,11 +68,11 @@ class HloAnalysis:
 
     @property
     def ici_bytes(self) -> float:
-        return sum(c.wire_bytes_ici for c in self.collectives.values())
+        return sum(c.wire_bytes_ici for c in self.collectives.values())  # det: ok parse-order collectives; fixed operand order
 
     @property
     def dcn_bytes(self) -> float:
-        return sum(c.wire_bytes_dcn for c in self.collectives.values())
+        return sum(c.wire_bytes_dcn for c in self.collectives.values())  # det: ok parse-order collectives; fixed operand order
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +108,7 @@ def _call_edges(comps: Dict[str, List[str]]
                 ) -> List[Tuple[str, str, int]]:
     """(caller, callee, multiplier) edges. while-bodies get ×trip."""
     edges: List[Tuple[str, str, int]] = []
-    for name, lines in comps.items():
+    for name, lines in comps.items():  # det: ok HLO parse order is deterministic per module
         if name == "__entry__":
             continue
         for ln in lines:
@@ -130,7 +130,7 @@ def _body_trips(comps: Dict[str, List[str]]) -> Dict[str, int]:
     dynamic-update-slice traffic: only 1/trip of the stacked buffer moves
     per iteration)."""
     out: Dict[str, int] = {}
-    for name, lines in comps.items():
+    for _name, lines in comps.items():  # det: ok HLO parse order is deterministic per module
         for ln in lines:
             m_tc = re.search(r'known_trip_count\\?":{\\?"n\\?":\\?"(\d+)', ln)
             if not m_tc:
@@ -156,7 +156,7 @@ def _multiplicities(comps: Dict[str, List[str]], entry: str
     while changed and iters < 64:
         changed = False
         iters += 1
-        for a, outs in out_edges.items():
+        for a, outs in out_edges.items():  # det: ok HLO parse order is deterministic per module
             ma = mult.get(a)
             if ma is None:
                 continue
@@ -305,7 +305,7 @@ def _iota_ids(dims: List[int], perm: List[int]) -> List[int]:
             for axis, p in enumerate(perm):
                 orig[p] = prefix[axis]
             lin = 0
-            for d, i in zip(dims, orig):
+            for d, i in zip(dims, orig, strict=False):
                 lin = lin * d + i
             ids.append(lin)
             return
@@ -343,7 +343,7 @@ def analyze(hlo_text: str, chips_per_pod: int = 256) -> HloAnalysis:
     _NO_TRAFFIC = (" tuple(", " get-tuple-element(", " parameter(",
                    " constant(", " bitcast(", " after-all(", " while(",
                    " conditional(", " call(", " custom-call(")
-    for name, lines in comps.items():
+    for name, lines in comps.items():  # det: ok HLO parse order is deterministic per module
         if name == "__entry__":
             continue
         m_c = mult.get(name, 0.0)

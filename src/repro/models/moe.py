@@ -236,7 +236,7 @@ def apply_moe_shard_map(cfg: ModelConfig, p: Params, x: jax.Array, rules
         if dp_axes:
             # router stats are token-local → average across data shards so
             # the aux losses equal the global-batch SPMD formulation
-            aux = {k: jax.lax.pmean(v, dp_axes) for k, v in aux.items()}
+            aux = {k: jax.lax.pmean(v, dp_axes) for k, v in sorted(aux.items())}
         return y.reshape(Bl, Sl, d), aux
 
     y, aux = shard_map(

@@ -158,7 +158,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
 
     lead = [one(cfg.block_spec(i)) for i in range(cfg.first_k_dense)]
     scan = []
-    for j, spec in enumerate(cfg.period_specs()):
+    for spec in cfg.period_specs():
         per_repeat = [one(spec) for _ in range(cfg.n_repeats)]
         if per_repeat and per_repeat[0]:
             scan.append(jax.tree_util.tree_map(

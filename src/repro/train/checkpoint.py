@@ -113,7 +113,7 @@ class CheckpointManager:
             if shardings is not None else [None] * len(items))
         leaves = []
         for (name, like), meta, shd in zip(items, manifest["leaves"],
-                                           shard_leaves):
+                                           shard_leaves, strict=True):
             if name != meta["key"]:
                 raise ValueError(f"leaf order mismatch: {name} vs {meta['key']}")
             arr = np.load(os.path.join(d, meta["file"]), allow_pickle=False)

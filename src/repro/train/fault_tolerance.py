@@ -137,7 +137,7 @@ class RecoveryPolicy:
                          ) -> Optional[RecoveryAction]:
         """Feed per-worker step times; if the monitor convicts a straggler,
         plan a re-mesh that excludes it (backup-dispatch pattern)."""
-        for w, t in step_times.items():
+        for w, t in sorted(step_times.items()):
             if self.monitor.health[w].alive:
                 self.monitor.observe(w, t * self.slow.get(w, 1.0), now)
         convicted = self.monitor.stragglers()

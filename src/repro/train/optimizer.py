@@ -180,7 +180,7 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
             flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_q)[0]
             flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_q)[0]
             outs = [upd8(p, g, m, v) for p, g, m, v
-                    in zip(flat_p, flat_g, flat_m, flat_v)]
+                    in zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
             new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
             new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
             new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in outs])
@@ -214,7 +214,8 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
         flat_p, tree = jax.tree_util.tree_flatten(params)
         flat_g = jax.tree_util.tree_flatten(grads)[0]
         flat_f = jax.tree_util.tree_flatten(state["fac"], is_leaf=is_fac)[0]
-        outs = [updf(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        outs = [updf(p, g, f) for p, g, f
+                in zip(flat_p, flat_g, flat_f, strict=True)]
         new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
         new_fac = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
         new_state = {"fac": new_fac, "step": step}
@@ -226,7 +227,8 @@ def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
         flat_p, tree = jax.tree_util.tree_flatten(params)
         flat_g = jax.tree_util.tree_flatten(grads)[0]
         flat_m = jax.tree_util.tree_flatten(state["m"])[0]
-        outs = [upds(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        outs = [upds(p, g, m) for p, g, m
+                in zip(flat_p, flat_g, flat_m, strict=True)]
         new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
         new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
         new_state = {"m": new_m, "step": step}

@@ -52,7 +52,7 @@ def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
         if grad_accum > 1:
             def micro(b):
                 return {k: v.reshape(grad_accum, v.shape[0] // grad_accum,
-                                     *v.shape[1:]) for k, v in b.items()}
+                                     *v.shape[1:]) for k, v in sorted(b.items())}
 
             def body(carry, mb):
                 g_acc = carry

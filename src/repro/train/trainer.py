@@ -90,7 +90,7 @@ class Trainer:
         while step < self.tcfg.n_steps:
             self._handle_events(step)
             batch = next(self.data)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            batch = {k: jnp.asarray(v) for k, v in sorted(batch.items())}
             t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
             jax.block_until_ready(metrics["loss"])

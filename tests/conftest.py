@@ -57,6 +57,7 @@ def _install_hypothesis_fallback() -> None:
         def deco(fn):
             fn._fallback_max_examples = kw.get("max_examples", 10)
             return fn
+
         return deco
 
     def given(**strategies):
@@ -68,10 +69,12 @@ def _install_hypothesis_fallback() -> None:
                 for _ in range(n):
                     drawn = {k: s.sample(rng) for k, s in strategies.items()}
                     fn(*args, **kwargs, **drawn)
+
             # hide the drawn parameters from pytest's fixture resolution
             del wrapper.__wrapped__
             wrapper.__signature__ = inspect.Signature()
             return wrapper
+
         return deco
 
     hyp_mod.given = given

@@ -72,7 +72,7 @@ def test_schedule_invariants(policy):
         by_pe.setdefault(a.pe, []).append((a.start, a.finish))
     for pe, spans in by_pe.items():
         spans.sort()
-        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:], strict=False):
             assert s2 >= f1 - 1e-9, (pe, (s1, f1), (s2, f2))
 
 

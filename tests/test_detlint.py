@@ -1,0 +1,247 @@
+"""Rule-by-rule fixtures for tools/detlint.py (the determinism lint).
+
+Each rule gets a positive (flagged) and negative (clean) fixture, written
+to a tmp tree that mimics the repo layout — ``src/`` scoping and the
+``src/repro/core/`` engine scoping are derived from the path, so the
+fixtures place files accordingly.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import pytest
+
+_DETLINT = Path(__file__).resolve().parent.parent / "tools" / "detlint.py"
+_spec = importlib.util.spec_from_file_location("detlint", _DETLINT)
+detlint = importlib.util.module_from_spec(_spec)
+sys.modules.setdefault("detlint", detlint)
+_spec.loader.exec_module(detlint)
+
+
+def run_lint(tmp_path, rel, source):
+    """Write ``source`` at ``rel`` under ``tmp_path`` and lint it."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    checker = detlint.check_file(path, repo_root=tmp_path)
+    return [f.code for f in checker.findings], checker
+
+
+SRC = "src/repro/serve/mod.py"
+ENGINE = "src/repro/core/mod.py"
+OUTSIDE = "benchmarks/mod.py"
+
+
+# -- DET101: unordered iteration ---------------------------------------------
+
+
+def test_det101_set_literal_iteration(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "for x in {1, 2}:\n    pass\n")
+    assert codes == ["DET101"]
+
+
+def test_det101_dict_items(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "for k, v in d.items():\n    pass\n")
+    assert codes == ["DET101"]
+
+
+def test_det101_set_comprehension_source(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "ys = [x for x in {1, 2}]\n")
+    assert codes == ["DET101"]
+
+
+def test_det101_sorted_is_clean(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, SRC, "for k in sorted(d.items()):\n    pass\n"
+    )
+    assert codes == []
+
+
+def test_det101_enumerate_wrapper_unwrapped(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, SRC, "for i, k in enumerate(d.keys()):\n    pass\n"
+    )
+    assert codes == ["DET101"]
+
+
+def test_det101_list_iteration_clean(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "for x in [1, 2]:\n    pass\n")
+    assert codes == []
+
+
+def test_det101_not_applied_outside_src(tmp_path):
+    codes, _ = run_lint(tmp_path, OUTSIDE, "for k, v in d.items():\n    pass\n")
+    assert codes == []
+
+
+def test_det101_pragma_suppresses_and_counts(tmp_path):
+    codes, checker = run_lint(
+        tmp_path,
+        SRC,
+        "for k, v in d.items():  # det: ok display order\n    pass\n",
+    )
+    assert codes == []
+    assert checker.annotated == 1
+
+
+def test_det100_bare_pragma_needs_reason(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, SRC, "for k, v in d.items():  # det: ok\n    pass\n"
+    )
+    assert "DET100" in codes
+
+
+# -- DET102: unseeded / global RNG -------------------------------------------
+
+
+def test_det102_global_random(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import random\nx = random.random()\n"
+    )
+    assert codes == ["DET102"]
+
+
+def test_det102_unseeded_random_instance(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import random\nr = random.Random()\n"
+    )
+    assert codes == ["DET102"]
+
+
+def test_det102_seeded_random_clean(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import random\nr = random.Random(0)\n"
+    )
+    assert codes == []
+
+
+def test_det102_np_legacy_global(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import numpy as np\nx = np.random.rand(3)\n"
+    )
+    assert codes == ["DET102"]
+
+
+def test_det102_unseeded_default_rng(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import numpy as np\ng = np.random.default_rng()\n"
+    )
+    assert codes == ["DET102"]
+
+
+def test_det102_seeded_default_rng_clean(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, OUTSIDE, "import numpy as np\ng = np.random.default_rng(0)\n"
+    )
+    assert codes == []
+
+
+# -- DET103: wall-clock reads in engine code ---------------------------------
+
+
+def test_det103_time_time_in_engine(tmp_path):
+    codes, _ = run_lint(tmp_path, ENGINE, "import time\nt = time.time()\n")
+    assert codes == ["DET103"]
+
+
+def test_det103_datetime_now_in_engine(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, ENGINE, "import datetime\nt = datetime.datetime.now()\n"
+    )
+    assert codes == ["DET103"]
+
+
+def test_det103_perf_counter_allowed(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, ENGINE, "import time\nt = time.perf_counter()\n"
+    )
+    assert codes == []
+
+
+def test_det103_time_time_outside_engine_clean(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "import time\nt = time.time()\n")
+    assert codes == []
+
+
+# -- DET104: float accumulation over unordered collections -------------------
+
+
+def test_det104_sum_over_dict_values(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "s = sum(d.values())\n")
+    assert codes == ["DET104"]
+
+
+def test_det104_sum_genexp_over_set(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "s = sum(x * 2 for x in {1.0, 2.0})\n")
+    # the set literal is flagged both as a float accumulation and as an
+    # unordered iteration source — one pragma would suppress both
+    assert sorted(codes) == ["DET101", "DET104"]
+
+
+def test_det104_sorted_sum_clean(tmp_path):
+    codes, _ = run_lint(tmp_path, SRC, "s = sum(sorted(d.values()))\n")
+    assert codes == []
+
+
+def test_det104_fsum_exempt(tmp_path):
+    codes, _ = run_lint(
+        tmp_path, SRC, "import math\ns = math.fsum(d.values())\n"
+    )
+    assert codes == []
+
+
+# -- DET105: horizon writes outside designated mutators ----------------------
+
+
+ENGINE_CLASS = """\
+class Engine:
+    def {name}(self):
+        self._pe_free[0] = 1.0
+"""
+
+
+@pytest.mark.parametrize("name", ["_place_i", "repool", "invalidate"])
+def test_det105_allowlisted_mutators_clean(tmp_path, name):
+    codes, _ = run_lint(tmp_path, ENGINE, ENGINE_CLASS.format(name=name))
+    assert codes == []
+
+
+def test_det105_write_outside_mutator(tmp_path):
+    codes, _ = run_lint(tmp_path, ENGINE, ENGINE_CLASS.format(name="step"))
+    assert codes == ["DET105"]
+
+
+def test_det105_link_free_mutating_call(tmp_path):
+    src = "class Engine:\n    def step(self):\n        self.link_free.clear()\n"
+    codes, _ = run_lint(tmp_path, ENGINE, src)
+    assert codes == ["DET105"]
+
+
+def test_det105_read_alias_not_flagged(tmp_path):
+    src = "class Engine:\n    def step(self):\n        pe_free = self._pe_free\n"
+    codes, _ = run_lint(tmp_path, ENGINE, src)
+    assert codes == []
+
+
+# -- driver ------------------------------------------------------------------
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "src" / "mod.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("for x in {1}:\n    pass\n")
+    assert detlint.main([str(bad)]) == 1
+    bad.write_text("for x in sorted({1}):\n    pass\n")
+    assert detlint.main([str(bad)]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+
+def test_repo_tree_is_clean():
+    """The repo's own src/tests/benchmarks must lint clean — the same
+    invocation CI runs."""
+    repo = Path(__file__).resolve().parent.parent
+    rc = detlint.main([str(repo / "src"), str(repo / "tests"),
+                       str(repo / "benchmarks")])
+    assert rc == 0

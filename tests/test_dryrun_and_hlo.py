@@ -15,9 +15,8 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 def test_hlo_analysis_on_synthetic_scan():
     """Trip counts, scan-corrected dot flops, collective detection."""
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=SRC)
+    flags = "--xla_force_host_platform_device_count=8"
+    env = dict(os.environ, XLA_FLAGS=flags, PYTHONPATH=SRC)
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, json
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -46,8 +45,8 @@ def test_hlo_analysis_on_synthetic_scan():
         out = {"colls": sorted(an.collectives)}
         print(json.dumps(out))
     """)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=420)
+    cmd = [sys.executable, "-c", code]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=420)
     assert r.returncode == 0, r.stderr[-4000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     # model-sharded matmul with sharded contraction → some collective
@@ -59,24 +58,23 @@ def test_dryrun_cell_end_to_end():
     with tempfile.TemporaryDirectory() as d:
         out = os.path.join(d, "cell.json")
         env = dict(os.environ, PYTHONPATH=SRC)
-        env.pop("XLA_FLAGS", None)   # dryrun sets its own 512-device flag
-        r = subprocess.run(
-            [sys.executable, "-m", "repro.launch.dryrun",
-             "--arch", "qwen3-0.6b", "--shape", "decode_32k",
-             "--mesh", "single", "--out", out],
-            capture_output=True, text=True, env=env, timeout=900)
+        env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-0.6b"]
+        cmd += ["--shape", "decode_32k", "--mesh", "single", "--out", out]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=900)
         assert r.returncode == 0, r.stderr[-4000:]
         res = json.load(open(out))
         assert res["n_chips"] == 256
         assert res["compile_s"] > 0
         assert res["memory_per_device"]["total_bytes"] > 0
-        assert res["roofline"]["dominant"] in ("compute_s", "memory_s",
-                                               "collective_s")
+        assert res["roofline"]["dominant"] in ("compute_s", "memory_s", "collective_s")
         assert res["hlo"]["dot_flops_per_dev"] > 0
 
 
-@pytest.mark.skipif(not os.path.isdir(RESULTS) or not os.listdir(RESULTS),
-                    reason="full dry-run sweep results not present")
+_SWEEP_MISSING = not os.path.isdir(RESULTS) or not os.listdir(RESULTS)
+
+
+@pytest.mark.skipif(_SWEEP_MISSING, reason="full dry-run sweep results not present")
 def test_dryrun_sweep_results_complete():
     """If the sweep has been run: every (arch × shape × mesh) cell present,
     every non-skipped cell compiled, skips only where DESIGN.md says."""

@@ -32,19 +32,19 @@ def test_executes_all_tasks_with_finite_outputs(setup):
 
 def test_host_device_end_to_end_parity(setup):
     wl, pool, sched, raw = setup
-    r_h = Executor(pool, backend_of=lambda pe: "host").execute(
-        wl, sched, inputs={"ingest": raw})
-    r_d = Executor(pool, backend_of=lambda pe: "device").execute(
-        wl, sched, inputs={"ingest": raw})
-    np.testing.assert_allclose(np.asarray(r_h.outputs["export"]),
-                               np.asarray(r_d.outputs["export"]), rtol=2e-3)
+    host = Executor(pool, backend_of=lambda pe: "host")
+    dev = Executor(pool, backend_of=lambda pe: "device")
+    r_h = host.execute(wl, sched, inputs={"ingest": raw})
+    r_d = dev.execute(wl, sched, inputs={"ingest": raw})
+    a = np.asarray(r_h.outputs["export"])
+    b = np.asarray(r_d.outputs["export"])
+    np.testing.assert_allclose(a, b, rtol=2e-3)
 
 
 def test_execution_feeds_learned_cost_model(setup):
     wl, pool, sched, raw = setup
     learned = LearnedCostModel(min_samples=1)
-    Executor(pool, learn_into=learned).execute(wl, sched,
-                                               inputs={"ingest": raw})
+    Executor(pool, learn_into=learned).execute(wl, sched, inputs={"ingest": raw})
     assert learned._obs  # observations recorded per (family, kind)
 
 
@@ -58,10 +58,9 @@ def test_zero_duration_predecessor_executes_before_successor():
     # work=0 → exec_time 0 → 'z_head' finishes the instant it starts, and
     # its successor 'a_tail' starts at the same timestamp; "a_tail" < "z_head"
     # by name, so the old sort ran the successor first
-    g.add_task(Task("z_head", "ingest", work=0.0, out_bytes=0.0,
-                    backends={"host": lambda: np.float32(3.0)}))
-    g.add_task(Task("a_tail", "export", work=1.0,
-                    backends={"host": lambda x: x * 2}))
+    heads = {"host": lambda: np.float32(3.0)}
+    g.add_task(Task("z_head", "ingest", work=0.0, out_bytes=0.0, backends=heads))
+    g.add_task(Task("a_tail", "export", work=1.0, backends={"host": lambda x: x * 2}))
     g.add_edge("z_head", "a_tail")
     pool = paper_pool(n_arm=1, n_volta=0, n_xeon=0, n_v100=0, n_alveo=0)
     sched = schedule(g, pool, CostModel(), policy="eft")

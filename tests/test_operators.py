@@ -9,7 +9,8 @@ from repro.pipeline import windows as W
 
 
 @pytest.fixture(scope="module")
-def x(rng=np.random.default_rng(0)):
+def x():
+    rng = np.random.default_rng(0)
     a = rng.normal(0, 1, (96, 6)).astype(np.float32)
     a[5, 3] = np.nan
     return a
@@ -36,7 +37,7 @@ def test_host_device_parity(op, x):
         args = (x,)
     else:
         args = (clean,)
-    for a, b in zip(_pairs(h(*args)), _pairs(d(*args))):
+    for a, b in zip(_pairs(h(*args)), _pairs(d(*args)), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=3e-4, atol=3e-4)
 

@@ -14,8 +14,7 @@ constants are calibrated; see repro.pipeline.workloads).
 
 import pytest
 
-from repro.core.simulator import (best_config, sweep_policies,
-                                  sweep_resource_configs)
+from repro.core.simulator import best_config, sweep_policies, sweep_resource_configs
 from repro.pipeline.workloads import ds_workload
 
 N = 100
@@ -55,7 +54,7 @@ def test_rq3_mixed_vs_server_only(fig6):
 
 def test_fig7a_eft_close_to_etf(fig7):
     a, b = fig7["eft"].makespan, fig7["etf"].makespan
-    assert abs(a - b) / max(a, b) < 0.10   # paper: "perform very closely"
+    assert abs(a - b) / max(a, b) < 0.10  # paper: "perform very closely"
 
 
 def test_fig7a_sophisticated_beat_rr(fig7):
@@ -78,8 +77,8 @@ def test_rq1_rq2_location_split(fig7):
 
 
 def test_beyond_paper_policies_no_worse_than_rr():
-    res = {r.policy: r for r in sweep_policies(
-        ds_workload(), n_instances=20,
-        policies=("rr", "heft", "minmin", "vos", "etf_hwang"))}
+    pols = ("rr", "heft", "minmin", "vos", "etf_hwang")
+    runs = sweep_policies(ds_workload(), n_instances=20, policies=pols)
+    res = {r.policy: r for r in runs}
     for pol in ("heft", "minmin", "vos", "etf_hwang"):
         assert res[pol].makespan < res["rr"].makespan

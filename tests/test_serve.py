@@ -21,36 +21,41 @@ def params():
 
 def _requests(n, seed=0, arrival_gap=0.5):
     rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    prompt=rng.integers(2, CFG.vocab_size,
-                                        size=int(rng.integers(4, 12))
-                                        ).astype(np.int32),
-                    max_new_tokens=int(rng.integers(3, 8)),
-                    arrival=i * arrival_gap,
-                    deadline=i * arrival_gap + float(rng.uniform(40, 200)))
-            for i in range(n)]
+    out = []
+    for i in range(n):
+        prompt = rng.integers(2, CFG.vocab_size, size=int(rng.integers(4, 12)))
+        req = Request(
+            rid=i,
+            prompt=prompt.astype(np.int32),
+            max_new_tokens=int(rng.integers(3, 8)),
+            arrival=i * arrival_gap,
+            deadline=i * arrival_gap + float(rng.uniform(40, 200)),
+        )
+        out.append(req)
+    return out
 
 
 def test_continuous_batching_matches_reference_greedy(params):
-    eng = ServeEngine(CFG, params, EngineConfig(max_batch=2, max_seq=64,
-                                                policy="eft"))
+    cfg = EngineConfig(max_batch=2, max_seq=64, policy="eft")
+    eng = ServeEngine(CFG, params, cfg)
     reqs = _requests(5)
     for r in reqs:
         eng.submit(r)
     done = {r.rid: r for r in eng.run()}
     assert len(done) == 5
     for r in reqs:
-        ref = np.asarray(greedy_generate(
-            CFG, params, jnp.asarray(r.prompt)[None],
-            r.max_new_tokens + 1, max_seq=64))[0]
+        toks = jnp.asarray(r.prompt)[None]
+        ref = greedy_generate(CFG, params, toks, r.max_new_tokens + 1, max_seq=64)
+        ref = np.asarray(ref)[0]
         got = np.asarray(done[r.rid].output)
-        np.testing.assert_array_equal(ref[:len(got)], got)
+        k = len(got)
+        np.testing.assert_array_equal(ref[:k], got)
 
 
 @pytest.mark.parametrize("policy", ["fcfs", "eft", "edf"])
 def test_all_policies_complete_all_requests(params, policy):
-    eng = ServeEngine(CFG, params, EngineConfig(max_batch=3, max_seq=64,
-                                                policy=policy))
+    cfg = EngineConfig(max_batch=3, max_seq=64, policy=policy)
+    eng = ServeEngine(CFG, params, cfg)
     for r in _requests(8, seed=policy.__hash__() % 100):
         eng.submit(r)
     done = eng.run()
@@ -63,19 +68,19 @@ def test_all_policies_complete_all_requests(params, policy):
 def test_eft_admits_short_jobs_first(params):
     """The paper's EFT rule at the request level: with one slot and a long
     + short request waiting, EFT admits the short one first."""
-    long_req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
-                       max_new_tokens=30, arrival=0.0)
-    short_req = Request(rid=1, prompt=np.arange(2, 6, dtype=np.int32),
-                        max_new_tokens=2, arrival=0.0)
-    eng = ServeEngine(CFG, params, EngineConfig(max_batch=1, max_seq=64,
-                                                policy="eft"))
+    long_p = np.arange(2, 12, dtype=np.int32)
+    short_p = np.arange(2, 6, dtype=np.int32)
+    long_req = Request(rid=0, prompt=long_p, max_new_tokens=30)
+    short_req = Request(rid=1, prompt=short_p, max_new_tokens=2)
+    cfg_eft = EngineConfig(max_batch=1, max_seq=64, policy="eft")
+    eng = ServeEngine(CFG, params, cfg_eft)
     eng.submit(long_req)
     eng.submit(short_req)
     eng.step()
     assert eng.slots[0] is not None and eng.slots[0].rid == 1
     # fcfs would pick the long one
-    eng2 = ServeEngine(CFG, params, EngineConfig(max_batch=1, max_seq=64,
-                                                 policy="fcfs"))
+    cfg_fcfs = EngineConfig(max_batch=1, max_seq=64, policy="fcfs")
+    eng2 = ServeEngine(CFG, params, cfg_fcfs)
     eng2.submit(long_req)
     eng2.submit(short_req)
     eng2.step()

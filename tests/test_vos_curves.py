@@ -159,7 +159,7 @@ def test_curve_float_monotonicity_contract():
         probes += [max(c.breaks, default=1.0) * 3.0]
         probes = sorted(p for p in probes if p >= 0.0)
         vals = [c.value(p) for p in probes]
-        for lo, hi in zip(vals[1:], vals):
+        for lo, hi in zip(vals[1:], vals, strict=False):
             assert lo <= hi, (c, probes)
 
 

@@ -1,0 +1,580 @@
+#!/usr/bin/env python
+"""detlint — repo-specific determinism lint for the byte-identical engine.
+
+Every correctness pin in this repo is a byte-identical-schedule claim
+(golden digests, differential fuzzers). Those pins catch nondeterminism
+*after* it produced a divergent schedule; this lint catches the classic
+sources at parse time:
+
+DET101  iteration over an unordered (or order-fragile) collection —
+        ``.items()`` / ``.keys()`` / ``.values()`` / ``set`` literals and
+        constructors — without a ``sorted()`` wrapper.  Python dicts are
+        insertion-ordered, but insertion order is itself a determinism
+        obligation nobody checks; every such loop must either sort or
+        carry an annotation arguing why its order is deterministic.
+        Scope: ``src/`` (library + engine code).
+DET102  unseeded or process-global RNG use (``random.random()``,
+        ``np.random.rand()``, ``default_rng()`` with no seed, …).
+        Scope: everywhere.
+DET103  wall-clock reads (``time.time``, ``datetime.now``) in engine
+        code — simulated time must never couple to real time.
+        Scope: ``src/repro/core/``.
+DET104  float accumulation (``sum``) over an unordered collection —
+        float addition is non-associative, so the order of the operands
+        changes the result bit pattern.  (``math.fsum`` is exempt: it is
+        exactly rounded, hence order-independent.)  Scope: ``src/``.
+DET105  direct writes to monotone horizon state (``pe_free`` /
+        ``link_free``) outside the designated mutator helpers.  The
+        engine's incremental selectors assume horizons only move through
+        those helpers (which bump the dirty epochs); a stray write
+        silently desynchronises the candidate heaps.  Scope: everywhere.
+
+Suppression: append ``# det: ok <reason>`` to the flagged line (the
+``for``/assignment line or any line of the offending expression).  The
+reason is mandatory — a bare ``# det: ok`` is itself a finding.
+
+Usage::
+
+    python tools/detlint.py src tests benchmarks
+    python tools/detlint.py --stats src
+
+Exit status 1 if any unannotated finding remains, 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+# Functions allowed to write pe_free/link_free: the engine's designated
+# horizon mutators (schedulers.py) — they pair every write with the dirty
+# epoch bump the incremental selectors rely on.  __init__ is allowed so
+# engines/tests can build the state in the first place.
+HORIZON_MUTATORS = frozenset(
+    {
+        "__init__",
+        "_place_i",
+        "_exec_start_book_i",
+        "apply_horizon_event",
+        "repool",
+        "invalidate",
+        "_replay_trusted",
+        "_replay_ghost",
+    }
+)
+
+HORIZON_ATTRS = frozenset({"pe_free", "_pe_free", "link_free"})
+
+# Mutating dict/list method calls that count as writes for DET105.
+MUTATING_METHODS = frozenset(
+    {"clear", "pop", "popitem", "update", "setdefault", "append", "extend"}
+)
+
+UNORDERED_VIEW_METHODS = frozenset({"items", "keys", "values"})
+
+# Wrappers that preserve whatever order their argument has: seeing one of
+# these around sorted() is fine, seeing one around .items() is not.
+ORDER_PRESERVING_WRAPPERS = frozenset(
+    {"enumerate", "reversed", "list", "tuple", "iter"}
+)
+
+# Module-level RNG functions on the stdlib `random` module that draw from
+# the process-global generator.
+GLOBAL_RANDOM_FNS = frozenset(
+    {
+        "random",
+        "randint",
+        "randrange",
+        "uniform",
+        "choice",
+        "choices",
+        "shuffle",
+        "sample",
+        "gauss",
+        "normalvariate",
+        "betavariate",
+        "expovariate",
+        "getrandbits",
+        "triangular",
+    }
+)
+
+# Legacy numpy global-state RNG entry points (np.random.<fn>).
+GLOBAL_NP_RANDOM_FNS = frozenset(
+    {
+        "rand",
+        "randn",
+        "randint",
+        "random",
+        "random_sample",
+        "choice",
+        "shuffle",
+        "permutation",
+        "uniform",
+        "normal",
+        "seed",
+    }
+)
+
+WALL_CLOCK_TIME_FNS = frozenset({"time", "time_ns"})
+WALL_CLOCK_DATETIME_FNS = frozenset({"now", "utcnow", "today"})
+
+PRAGMA = "# det: ok"
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: Path
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.code} {self.message}"
+
+
+def _attr_chain_tail(node: ast.expr) -> str | None:
+    """Name of the final attribute/name in a dotted chain, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _unwrap_order_preserving(node: ast.expr) -> ast.expr:
+    """Strip enumerate()/reversed()/list()/tuple()/iter() wrappers."""
+    while (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in ORDER_PRESERVING_WRAPPERS
+        and node.args
+    ):
+        node = node.args[0]
+    return node
+
+
+def _is_sorted_call(node: ast.expr) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in {"sorted", "min", "max"}
+    )
+
+
+def _unordered_source(node: ast.expr) -> str | None:
+    """Describe ``node`` if it is an unordered-iteration source."""
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr in UNORDERED_VIEW_METHODS
+            and not node.args
+            and not node.keywords
+        ):
+            return f".{fn.attr}()"
+        if isinstance(fn, ast.Name) and fn.id in {"set", "frozenset"}:
+            return f"{fn.id}(...)"
+    if isinstance(node, ast.Set):
+        return "set literal"
+    if isinstance(node, ast.SetComp):
+        return "set comprehension"
+    return None
+
+
+def _iter_violation(node: ast.expr) -> str | None:
+    """Check a for/comprehension iterable for an unordered source."""
+    node = _unwrap_order_preserving(node)
+    if _is_sorted_call(node):
+        return None
+    return _unordered_source(node)
+
+
+class _FileChecker(ast.NodeVisitor):
+    def __init__(
+        self,
+        path: Path,
+        source: str,
+        *,
+        in_src: bool,
+        in_engine: bool,
+    ) -> None:
+        self.path = path
+        self.lines = source.splitlines()
+        self.in_src = in_src
+        self.in_engine = in_engine
+        self.findings: list[Finding] = []
+        self.annotated = 0
+        self.bad_pragmas: list[int] = []
+        self._func_stack: list[str] = []
+        self._pragma_lines = self._collect_pragmas()
+
+    # -- pragma handling ---------------------------------------------------
+
+    def _collect_pragmas(self) -> set[int]:
+        ok: set[int] = set()
+        for i, line in enumerate(self.lines, start=1):
+            idx = line.find(PRAGMA)
+            if idx < 0:
+                continue
+            reason = line[idx + len(PRAGMA) :].strip()
+            if reason:
+                ok.add(i)
+            else:
+                self.bad_pragmas.append(i)
+        return ok
+
+    def _suppressed(self, node: ast.AST) -> bool:
+        first = getattr(node, "lineno", None)
+        last = getattr(node, "end_lineno", None) or first
+        if first is None:
+            return False
+        return any(ln in self._pragma_lines for ln in range(first, last + 1))
+
+    def _emit(self, node: ast.AST, code: str, message: str) -> None:
+        if self._suppressed(node):
+            self.annotated += 1
+            return
+        self.findings.append(
+            Finding(
+                self.path,
+                getattr(node, "lineno", 0),
+                getattr(node, "col_offset", 0),
+                code,
+                message,
+            )
+        )
+
+    # -- scope bookkeeping -------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    # -- DET101: unordered iteration --------------------------------------
+
+    def _check_iter(self, iter_node: ast.expr, site: ast.AST) -> None:
+        if not self.in_src:
+            return
+        desc = _iter_violation(iter_node)
+        if desc:
+            self._emit(
+                site,
+                "DET101",
+                f"iteration over unordered {desc} without sorted() — "
+                "sort it or annotate '# det: ok <why deterministic>'",
+            )
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter, node)
+        self.generic_visit(node)
+
+    def visit_AsyncFor(self, node: ast.AsyncFor) -> None:
+        self._check_iter(node.iter, node)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node: ast.AST) -> None:
+        for gen in node.generators:
+            self._check_iter(gen.iter, gen.iter)
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_SetComp = _visit_comp
+    visit_DictComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+
+    # -- call-based rules ---------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self._check_rng(node)
+        self._check_wall_clock(node)
+        self._check_float_sum(node)
+        self._check_horizon_method_call(node)
+        self.generic_visit(node)
+
+    def _check_rng(self, node: ast.Call) -> None:
+        fn = node.func
+        if not isinstance(fn, ast.Attribute):
+            # bare Random() with no seed
+            if (
+                isinstance(fn, ast.Name)
+                and fn.id == "Random"
+                and not node.args
+            ):
+                self._emit(node, "DET102", "Random() constructed without a seed")
+            return
+        owner = fn.value
+        # random.<fn>(...) on the stdlib module (global generator)
+        if (
+            isinstance(owner, ast.Name)
+            and owner.id == "random"
+            and fn.attr in GLOBAL_RANDOM_FNS
+        ):
+            self._emit(
+                node,
+                "DET102",
+                f"process-global RNG random.{fn.attr}() — "
+                "use a seeded random.Random(seed) instance",
+            )
+            return
+        if fn.attr == "Random" and not node.args:
+            self._emit(node, "DET102", "random.Random() without a seed")
+            return
+        # np.random.<fn>(...) legacy global state
+        if (
+            isinstance(owner, ast.Attribute)
+            and owner.attr == "random"
+            and isinstance(owner.value, ast.Name)
+            and owner.value.id in {"np", "numpy"}
+        ):
+            if fn.attr in GLOBAL_NP_RANDOM_FNS:
+                self._emit(
+                    node,
+                    "DET102",
+                    f"numpy global RNG np.random.{fn.attr}() — "
+                    "use np.random.default_rng(seed)",
+                )
+            elif fn.attr == "default_rng" and not node.args and not node.keywords:
+                self._emit(
+                    node,
+                    "DET102",
+                    "np.random.default_rng() without a seed draws OS entropy",
+                )
+            return
+        if (
+            fn.attr == "default_rng"
+            and not node.args
+            and not node.keywords
+            and isinstance(owner, ast.Name)
+            and owner.id == "random"
+        ):
+            self._emit(
+                node,
+                "DET102",
+                "default_rng() without a seed draws OS entropy",
+            )
+
+    def _check_wall_clock(self, node: ast.Call) -> None:
+        if not self.in_engine:
+            return
+        fn = node.func
+        if not isinstance(fn, ast.Attribute):
+            return
+        owner = fn.value
+        if (
+            isinstance(owner, ast.Name)
+            and owner.id == "time"
+            and fn.attr in WALL_CLOCK_TIME_FNS
+        ):
+            self._emit(
+                node,
+                "DET103",
+                f"wall-clock time.{fn.attr}() in engine code — "
+                "simulated time must not couple to real time",
+            )
+        elif fn.attr in WALL_CLOCK_DATETIME_FNS and _attr_chain_tail(owner) in {
+            "datetime",
+            "date",
+        }:
+            self._emit(
+                node,
+                "DET103",
+                f"wall-clock datetime {fn.attr}() in engine code",
+            )
+
+    def _check_float_sum(self, node: ast.Call) -> None:
+        if not self.in_src:
+            return
+        fn = node.func
+        if not (isinstance(fn, ast.Name) and fn.id == "sum" and node.args):
+            return
+        arg = _unwrap_order_preserving(node.args[0])
+        if _is_sorted_call(arg):
+            return
+        desc = _unordered_source(arg)
+        if desc is None and isinstance(arg, ast.GeneratorExp):
+            for gen in arg.generators:
+                desc = _iter_violation(gen.iter)
+                if desc:
+                    break
+        if desc:
+            self._emit(
+                node,
+                "DET104",
+                f"float sum() over unordered {desc} — float addition is "
+                "order-sensitive; sort the operands or use math.fsum",
+            )
+
+    # -- DET105: horizon writes ---------------------------------------------
+
+    def _horizon_target_name(self, node: ast.expr) -> str | None:
+        """Return the horizon attr if ``node`` stores into pe_free/link_free.
+
+        A plain ``pe_free = ...`` name binding is NOT a write — it is the
+        repo idiom for hoisting a read alias out of a hot loop — but
+        ``x.pe_free = ...``, ``pe_free[j] = ...`` and ``x.pe_free[j] = ...``
+        all mutate the shared horizon state.
+        """
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Name):
+            return None
+        tail = _attr_chain_tail(node)
+        if tail in HORIZON_ATTRS:
+            return tail
+        return None
+
+    def _in_designated_mutator(self) -> bool:
+        return any(f in HORIZON_MUTATORS for f in self._func_stack)
+
+    def _emit_horizon(self, node: ast.AST, attr: str, verb: str) -> None:
+        self._emit(
+            node,
+            "DET105",
+            f"{verb} to monotone horizon state '{attr}' outside the "
+            "designated mutators "
+            "(_place_i/apply_horizon_event/repool/invalidate/replay)",
+        )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if not self._in_designated_mutator():
+            flat: list[ast.expr] = []
+            for tgt in node.targets:
+                if isinstance(tgt, (ast.Tuple, ast.List)):
+                    flat.extend(tgt.elts)
+                else:
+                    flat.append(tgt)
+            for tgt in flat:
+                attr = self._horizon_target_name(tgt)
+                if attr:
+                    self._emit_horizon(node, attr, "direct write")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if not self._in_designated_mutator():
+            attr = self._horizon_target_name(node.target)
+            if attr:
+                self._emit_horizon(node, attr, "augmented write")
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        if not self._in_designated_mutator():
+            for tgt in node.targets:
+                attr = self._horizon_target_name(tgt)
+                if attr:
+                    self._emit_horizon(node, attr, "delete")
+        self.generic_visit(node)
+
+    def _check_horizon_method_call(self, node: ast.Call) -> None:
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr in MUTATING_METHODS):
+            return
+        # .get()/.items() reads are fine; only mutating methods get here
+        if fn.attr == "pop" and not node.args:
+            pass  # list.pop() with no args still mutates — keep flagging
+        tail = _attr_chain_tail(fn.value)
+        if tail in HORIZON_ATTRS and not self._in_designated_mutator():
+            self._emit_horizon(node, tail, f".{fn.attr}() call")
+
+
+def check_file(path: Path, *, repo_root: Path | None = None) -> _FileChecker:
+    rel = path
+    if repo_root is not None:
+        try:
+            rel = path.resolve().relative_to(repo_root.resolve())
+        except ValueError:
+            rel = path
+    posix = rel.as_posix()
+    in_src = posix.startswith("src/") or "/src/" in posix
+    in_engine = "src/repro/core/" in posix or posix.startswith("src/repro/core")
+    source = path.read_text(encoding="utf-8")
+    checker = _FileChecker(path, source, in_src=in_src, in_engine=in_engine)
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        checker.findings.append(
+            Finding(path, exc.lineno or 0, 0, "DET000", f"syntax error: {exc.msg}")
+        )
+        return checker
+    checker.visit(tree)
+    for ln in checker.bad_pragmas:
+        checker.findings.append(
+            Finding(
+                path,
+                ln,
+                0,
+                "DET100",
+                "bare '# det: ok' pragma — a justification is mandatory",
+            )
+        )
+    return checker
+
+
+def iter_python_files(roots: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            print(f"detlint: no such path: {root}", file=sys.stderr)
+            raise SystemExit(2)
+    return files
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="detlint", description="determinism lint (see module docstring)"
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument(
+        "--stats",
+        action="store_true",
+        help="print per-rule finding/annotation counts",
+    )
+    args = ap.parse_args(argv)
+
+    repo_root = Path(__file__).resolve().parent.parent
+    findings: list[Finding] = []
+    annotated = 0
+    nfiles = 0
+    for path in iter_python_files(args.paths):
+        checker = check_file(path, repo_root=repo_root)
+        findings.extend(checker.findings)
+        annotated += checker.annotated
+        nfiles += 1
+
+    for f in findings:
+        print(f.render())
+    if args.stats:
+        by_code: dict[str, int] = {}
+        for f in findings:
+            by_code[f.code] = by_code.get(f.code, 0) + 1
+        for code in sorted(by_code):
+            print(f"{code}: {by_code[code]} unannotated")
+        print(f"{annotated} annotated suppression(s) across {nfiles} file(s)")
+    if findings:
+        print(
+            f"detlint: {len(findings)} unannotated finding(s) "
+            f"({annotated} annotated) in {nfiles} file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"detlint: clean — {nfiles} file(s), {annotated} annotated suppression(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
