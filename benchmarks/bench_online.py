@@ -38,6 +38,74 @@ import sys
 import time
 
 
+def bursty_arrivals(n: int, seed: int = 0, mean_gap: float = 5.0,
+                    alpha: float = 1.5, max_burst: int = 64):
+    """Heavy-tailed bursty arrival trace: ``n`` timestamps, grouped into
+    Zipf-sized bursts of coincident arrivals separated by Pareto(``alpha``)
+    quiet gaps (both heavy-tailed — the edge-traffic shape the scale tier
+    exists for: long idle stretches punctuated by k-at-once floods that
+    exercise the batched admission sweep). Deterministic per ``seed``."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    ts: list = []
+    t = 0.0
+    while len(ts) < n:
+        burst = int(min(rng.zipf(2.0), max_burst))
+        t += mean_gap * (rng.pareto(alpha) + 0.1)
+        ts.extend([t] * burst)
+    return ts[:n]
+
+
+def bench_scale(n: int, policies, seed: int, max_event_us: float):
+    """The n=10^4-class scale tier: stream ``n`` instances along a
+    :func:`bursty_arrivals` trace through the online driver and gate the
+    per-event cost. The trace (instance clones + timestamps) is built
+    *before* the clock starts — workload synthesis is the generator's
+    cost, not the runtime's — and byte-identity of the batched admission
+    path is pinned separately by the serial-vs-batched differentials in
+    tests/test_online.py, so this tier is pure runtime timing plus the
+    batching/live-set telemetry."""
+    from repro.core.cost_model import CostModel
+    from repro.core.online import OnlineDriver
+    from repro.core.resources import paper_pool
+    from repro.pipeline.workloads import ds_workload
+
+    wl = ds_workload()
+    pool = paper_pool()
+    cost = CostModel()
+    arrivals = bursty_arrivals(n, seed=seed)
+    trace = [(wl.instance(i), at) for i, at in enumerate(arrivals)]
+    results: dict = {}
+    failures: list = []
+    for pol in policies:
+        t0 = time.perf_counter()
+        drv = OnlineDriver(pool, cost, policy=pol)
+        for dag, at in trace:
+            drv.submit(dag, arrival_t=at)
+        drv.run()
+        wall = time.perf_counter() - t0
+        res = drv.result(wall_seconds=wall)
+        per_event_us = wall / max(res.n_events, 1) * 1e6
+        results[pol] = {
+            "n": n,
+            "trace_seed": seed,
+            "wall_seconds": round(wall, 3),
+            "per_event_us": round(per_event_us, 2),
+            "n_events": res.n_events,
+            "n_batched_steps": res.n_batched_steps,
+            "max_live": res.max_live,
+        }
+        print(f"online-scale,{pol}_n{n}_wall,{wall:.3f},s  "
+              f"({per_event_us:.1f}us/event, "
+              f"{res.n_batched_steps} batched sweeps, "
+              f"live<={res.max_live})")
+        if max_event_us and per_event_us > max_event_us:
+            failures.append(
+                f"scale {pol} n={n}: {per_event_us:.1f}us/event > "
+                f"bound {max_event_us:g}us")
+    return results, failures
+
+
 def bench(sizes, policies, period: float, max_ratio: float):
     from repro.core.cost_model import CostModel
     from repro.core.online import run_online
@@ -112,12 +180,29 @@ def main(argv=None) -> int:
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail if online wall time exceeds this multiple "
                          "of the batch engine at the same n")
+    ap.add_argument("--scale", type=int, default=0,
+                    help="also run the bursty-trace scale tier at this n "
+                         "(0 = skip)")
+    ap.add_argument("--scale-policies", default="etf,eft",
+                    help="policies for the scale tier")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="seed for the bursty arrival trace")
+    ap.add_argument("--max-event-us", type=float, default=0.0,
+                    help="fail if the scale tier exceeds this per-event "
+                         "cost (0 = report only)")
     args = ap.parse_args(argv)
     sizes = [24] if args.smoke else [int(s) for s in args.sizes.split(",")]
     policies = (["eft", "etf", "vos", "vos_hetero"] if args.smoke
                 else args.policies.split(","))
     t0 = time.perf_counter()
     results, failures = bench(sizes, policies, args.period, args.max_ratio)
+    scale_results = None
+    if args.scale:
+        scale_results, sfail = bench_scale(args.scale,
+                                           args.scale_policies.split(","),
+                                           args.trace_seed,
+                                           args.max_event_us)
+        failures.extend(sfail)
     if args.out:
         payload = {}
         if os.path.exists(args.out):
@@ -134,6 +219,16 @@ def main(argv=None) -> int:
             },
             "results": results,
         }
+        if scale_results is not None:
+            payload["online"]["scale"] = {
+                "meta": {
+                    "trace": "bursty_arrivals: Zipf(2) burst sizes x "
+                             "Pareto(1.5) gaps, pre-generated (synthesis "
+                             "not charged to the runtime)",
+                    "seed": args.trace_seed,
+                },
+                "results": scale_results,
+            }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")

@@ -215,13 +215,38 @@ class PipelineDAG:
 
         The paper submits 100 *instances* of the DS workload at once; each
         instance is an independent copy competing for the same pool.
+
+        Cloning renames but never re-shapes, so the clone's
+        :class:`DAGIndex` is derived from this DAG's cached index — the
+        integer adjacency and topo tuples are *shared* (ids are identical
+        under renaming) and the per-instance cost drops to the task
+        renames plus one name table. This is the per-arrival setup cost
+        of every online trace generator, so it is deliberately O(tasks)
+        with no topological re-sort.
         """
-        g = PipelineDAG(name=f"{self.name}#{idx}")
-        for t in self.tasks:
-            g.add_task(dataclasses.replace(t, name=f"{t.name}#{idx}"))
-        for n, succ in self._succ.items():  # det: ok edge insertion order mirrors the source DAG's
-            for s in succ:
-                g._add_edge_unchecked(f"{n}#{idx}", f"{s}#{idx}")
+        base = self.index()
+        suffix = f"#{idx}"
+        g = PipelineDAG(name=f"{self.name}{suffix}")
+        names = tuple(n + suffix for n in base.names)
+        # direct constructor, not dataclasses.replace: same shallow copy
+        # (backends/params dicts shared, like replace), ~2x cheaper, and
+        # this runs once per task per arrival
+        tasks = tuple(Task(nm, t.op, t.work, t.out_bytes, t.in_bytes,
+                           t.backends, t.params)
+                      for t, nm in zip(base.tasks, names, strict=True))
+        g_tasks = g._tasks
+        g_succ = g._succ
+        g_pred = g._pred
+        for i, nm in enumerate(names):
+            g_tasks[nm] = tasks[i]
+            g_succ[nm] = [names[s] for s in base.succs[i]]
+            g_pred[nm] = [names[p] for p in base.preds[i]]
+        g._version = 1
+        g._index = DAGIndex(
+            tasks=tasks, names=names,
+            id_of={nm: i for i, nm in enumerate(names)},
+            preds=base.preds, succs=base.succs, topo=base.topo)
+        g._index_version = g._version
         return g
 
 

@@ -66,6 +66,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG
+from repro.core.preemption import (CheckpointCost, PreemptionReport,
+                                   find_victim)
 from repro.core.recovery import (PartitionReport, PEBackoff, RecoveryReport,
                                  RetryState, TaskRecord, compute_lost,
                                  lost_exec_seconds)
@@ -115,6 +117,15 @@ class OnlineRunResult(RunResult):
     #: instance names cancelled (retry budget) or shed (capacity loss)
     cancelled: List[str] = dataclasses.field(default_factory=list)
     shed: List[str] = dataclasses.field(default_factory=list)
+    #: preempting admissions that actually displaced work
+    #: (:meth:`OnlineDriver.admit_preempting` with a victim)
+    n_preemptions: int = 0
+    #: booked tasks displaced across all preemptions (victim + booked
+    #: dependents, re-entering as priced resubmissions)
+    n_displaced: int = 0
+    #: admission sweeps that admitted more than one instance against a
+    #: single gate peek (``OnlineEngine.admit_batch`` fast path)
+    n_batched_steps: int = 0
 
 
 class OnlineDriver:
@@ -191,6 +202,14 @@ class OnlineDriver:
         self.retry_floors: Dict[str, float] = {}
         self.cancelled_instances: List[str] = []
         self.shed_instances: List[str] = []
+        # -- value-aware preemption (see repro.core.preemption) --------------
+        #: audit record, one report per admit_preempting() call
+        self.preemptions: List[PreemptionReport] = []
+        #: preempting admissions that displaced work / tasks displaced
+        self.n_preemptions = 0
+        self.n_displaced = 0
+        #: admission sweeps that admitted >1 instance in one engine batch
+        self.n_batched_steps = 0
         # -- site-level fault domains (see repro.core.federation) ------------
         #: flap quarantine at *site* granularity — a partition's quarantine
         #: deadline doubles as the heal estimate priced into the floors
@@ -272,21 +291,40 @@ class OnlineDriver:
         return self._live
 
     def _admit_now(self, dag: PipelineDAG, arrival_t: float) -> InstanceState:
-        tids = self.eng.admit(dag, arrival_t)
-        self.policy.on_admit(dag)
-        inst = InstanceState(dag.name, arrival_t,
-                             tids[0] if tids else len(self._inst_of),
-                             len(tids), dag, remaining=len(tids))
-        self.instances.append(inst)
-        self._inst_of.extend([len(self.instances) - 1] * len(tids))
-        if inst.remaining == 0:  # degenerate empty instance
-            inst.completed = True
-            self.completions.append((inst.name, inst.finish))
-        else:
-            self._live += 1
-            if self._live > self.max_live:
-                self.max_live = self._live
-        return inst
+        self._admit_now_batch([(dag, arrival_t)])
+        return self.instances[-1]
+
+    def _admit_now_batch(self,
+                         batch: Sequence[Tuple[PipelineDAG, float]]) -> None:
+        """Admit ``k`` instances in one engine call
+        (:meth:`OnlineEngine.admit_batch`): dense per-task state grows
+        once, the cost tables grow by one concatenated batch call, and the
+        selector re-advertises the whole batch's sources in one
+        ``push_ready`` sweep on the next step. Per-instance policy state
+        (``on_admit``) and instance book-keeping still run in admission
+        order — byte-identical to k sequential :meth:`_admit_now` calls
+        (``on_admit`` folds ranks/curves from the DAG and pool only, never
+        from interleaved engine state)."""
+        tid_lists = self.eng.admit_batch([dag for dag, _t in batch],
+                                         [t for _dag, t in batch])
+        on_admit = self.policy.on_admit
+        instances = self.instances
+        for (dag, arrival_t), tids in zip(batch, tid_lists, strict=True):
+            on_admit(dag)
+            inst = InstanceState(dag.name, arrival_t,
+                                 tids[0] if tids else len(self._inst_of),
+                                 len(tids), dag, remaining=len(tids))
+            instances.append(inst)
+            self._inst_of.extend([len(instances) - 1] * len(tids))
+            if inst.remaining == 0:  # degenerate empty instance
+                inst.completed = True
+                self.completions.append((inst.name, inst.finish))
+            else:
+                self._live += 1
+                if self._live > self.max_live:
+                    self.max_live = self._live
+        if len(batch) > 1:
+            self.n_batched_steps += 1
 
     def _drain_pending(self) -> None:
         """Lazily pop _pending entries the floor gate already admitted
@@ -304,22 +342,41 @@ class OnlineDriver:
 
     def _admit_due(self) -> None:
         """Admit every pending instance whose per-instance key floor does
-        not exceed the current best candidate key (see module docstring);
-        re-peek after each admission — fresh candidates may lower the
-        best key and pull in further arrivals."""
+        not exceed the current best candidate key (see module docstring).
+        Admissions are *batched*: each sweep drains the whole
+        ``floor <= best`` prefix of the gate heap against a single
+        ``peek_time`` and folds it into the engine with one
+        :meth:`_admit_now_batch` call, then re-peeks — fresh candidates
+        may lower the best key and pull in further arrivals. A sweep can
+        admit an instance a strictly serial gate would have held a peek
+        or two longer (serial re-peeks between admissions, and the best
+        key only decreases), but every such instance's candidate keys are
+        >= its floor > the keys that win the interleaved pops, so the
+        placement sequence — and the schedule — is byte-identical to
+        serial admission (pinned by the batch-vs-serial differentials in
+        tests/test_online.py)."""
         pol = self.policy
         eng = self.eng
+        deferrable = pol.deferrable
         while self._n_pending:
             # only gate when live candidates exist: with an empty ready set
             # the next arrival (in arrival order) must be admitted
             # regardless (and policy state — e.g. VoS's default curve —
             # may not exist before the first admission)
-            if not (pol.deferrable and eng._ready):
-                t, seq, dag = self._pop_earliest()
-                if self._gate is not None:
-                    self._dead_gate.add(seq)  # its floor entry lingers
-                self._n_pending -= 1
-                self._admit_now(dag, t)
+            if not (deferrable and eng._ready):
+                # non-deferrable policies take this branch for *every*
+                # pending instance — drain them all as one batch, in
+                # (arrival, submit) order
+                batch: List[Tuple[PipelineDAG, float]] = []
+                while self._n_pending:
+                    t, seq, dag = self._pop_earliest()
+                    if self._gate is not None:
+                        self._dead_gate.add(seq)  # its floor entry lingers
+                    self._n_pending -= 1
+                    batch.append((dag, t))
+                    if deferrable:
+                        break  # first admission may create candidates
+                self._admit_now_batch(batch)
                 continue
             gate = self._gate
             if gate is None:
@@ -336,22 +393,163 @@ class OnlineDriver:
                 dead_gate.discard(heapq.heappop(gate)[2])
             if not gate:
                 break
-            floor, t, seq, dag = gate[0]
             best = pol.peek_time()
-            if best is not None and floor > best:
+            batch = []
+            while gate:
+                floor, t, seq, dag = gate[0]
+                if best is not None and floor > best:
+                    break
+                heapq.heappop(gate)
+                self._dead_pending.add(seq)
+                self._n_pending -= 1
+                batch.append((dag, t))
+                while gate and gate[0][2] in dead_gate:
+                    dead_gate.discard(heapq.heappop(gate)[2])
+            if not batch:
                 break
-            heapq.heappop(gate)
-            self._dead_pending.add(seq)
             self._drain_pending()
-            self._n_pending -= 1
-            self._admit_now(dag, t)
+            self._admit_now_batch(batch)
+
+    # -- value-aware preemption -----------------------------------------------
+    def admit_preempting(self, dag: PipelineDAG, arrival_t: float,
+                         curve: Optional[object] = None,
+                         checkpoint: Optional[CheckpointCost] = None,
+                         margin: float = 0.0) -> PreemptionReport:
+        """Admit ``dag`` at ``arrival_t``, displacing running low-value
+        work when the arrival is worth more (see
+        :mod:`repro.core.preemption`).
+
+        The arrival's worth is its curve value at ``arrival_t`` (the
+        negated admission-gate floor). If some in-flight placement's
+        remaining value sits more than ``margin`` below it, that victim
+        is checkpointed and displaced: its PE is occupied for the
+        checkpoint write via a durable ``"raise"`` horizon event, the
+        victim (plus booked dependents, via the PR-6 lineage pass with
+        the victim as ``extra_lost``) is invalidated, and the victim
+        re-enters admission at ``t + checkpoint + restore`` — a *priced
+        resubmission*: no retry budget charged, no lost-work telemetry.
+        Otherwise this degrades to a plain :meth:`submit` through the
+        admission gate and records a victimless report, so a run in
+        which no preemption fires is byte-identical to one that never
+        called this method. Needs the ``"vos"`` policy with structured
+        curves (value comparison is curve-denominated).
+
+        Continuing the driver afterwards stays byte-identical to
+        :func:`restart_from_history` on the durable record — the same
+        differential that pins :meth:`fail`."""
+        t = float(arrival_t)
+        t0 = time.perf_counter()
+        pol = self.policy
+        if not hasattr(pol, "add_curve") or getattr(pol, "_custom", False):
+            raise ValueError(
+                "admit_preempting needs the 'vos' policy with structured "
+                f"value curves, not {self.policy_name!r}")
+        if curve is not None:
+            pol.add_curve(dag, curve)
+            if self.sanitizer is not None:
+                _validate_curve(curve, name=dag.name)
+        arrival_value = -pol.arrival_floor(t, dag)
+        eng = self.eng
+        di = eng._di
+        id_of = di.id_of
+        names = di.names
+        task_curves = pol._task_curves
+        pool_default = pol._pool_default
+
+        def curve_of(nm: str) -> Optional[object]:
+            c = task_curves[id_of[nm]]
+            return c if c is not None else pool_default[0]
+
+        victim = None
+        if arrival_value != float("inf"):
+            victim = find_victim(eng.assignments, t, curve_of,
+                                 arrival_value, margin)
+        if victim is None:
+            self.submit(dag, t)
+            rep = PreemptionReport(
+                t=t, arrival=dag.name, arrival_value=arrival_value,
+                victim=None, victim_pe=None, victim_value=float("nan"),
+                displaced=(), checkpoint_seconds=0.0, restore_seconds=0.0,
+                resume_floor=t,
+                wall_seconds=time.perf_counter() - t0)
+            self.preemptions.append(rep)
+            return rep
+        victim_task = di.tasks[id_of[victim.task]]
+        victim_curve = curve_of(victim.task)
+        victim_value = victim_curve.value(victim.finish)
+        ckpt = checkpoint if checkpoint is not None else CheckpointCost()
+        ck_s = ckpt.checkpoint_seconds(victim_task)
+        rs_s = ckpt.restore_seconds(victim_task)
+        resume_floor = t + ck_s + rs_s
+        # displaced closure: the victim plus every booked task that
+        # (transitively) consumed its never-produced output — same
+        # lineage pass as fail(), with no dead PEs
+        records = {a.task: TaskRecord(a.pe, a.start, a.start + a.comm_wait,
+                                      a.finish)
+                   for a in eng.assignments}
+        cancelled_names = {names[tid] for tid in eng._cancelled}
+
+        def succs_of(nm: str) -> List[str]:
+            return [names[s] for s in di.succs[id_of[nm]]]
+
+        def preds_of(nm: str) -> List[str]:
+            return [names[p] for p in di.preds[id_of[nm]]]
+
+        lost = compute_lost(records, succs_of, preds_of, set(), t,
+                            extra_lost={victim.task},
+                            cancelled=cancelled_names)
+        if self.sanitizer is not None:
+            self.sanitizer.check_fail(records, lost, succs_of, preds_of,
+                                      set(), t, extra_lost={victim.task},
+                                      cancelled=cancelled_names)
+        # priced resubmission, not a failure: no retry.charge, no
+        # lost-work telemetry — but the resume floor is durable like any
+        # backoff floor (restart_from_history re-applies it)
+        floors = {victim.task: resume_floor}
+        if resume_floor > self.retry_floors.get(victim.task, float("-inf")):
+            self.retry_floors[victim.task] = resume_floor
+        lost_names = set(lost)
+        for nm in lost:
+            self._loc_of.pop(nm, None)
+        self.horizon_events = self._remap_horizon_events(eng.assignments,
+                                                         lost_names)
+        eng.invalidate([id_of[nm] for nm in lost], arrival_floors=floors,
+                       loc_of=self._loc_of, events=self.horizon_events)
+        fin = eng._finish
+        for inst in self.instances:
+            if inst.cancelled:
+                eng.cancel([tid for tid in range(
+                    inst.first_tid, inst.first_tid + inst.n_tasks)
+                    if fin[tid] is None])
+        self._resync_instances()
+        if self.sanitizer is not None:
+            self.sanitizer.resync("preempt")
+        # the checkpoint write occupies the victim's PE until t + ck_s —
+        # a durable horizon raise (replayed at this history index on
+        # restart; also rebinds the policy and resets the gate)
+        self._apply_event_live("raise", {victim.pe: t + ck_s}, {})
+        self._admit_now(dag, t)
+        self.n_preemptions += 1
+        self.n_displaced += len(lost)
+        rep = PreemptionReport(
+            t=t, arrival=dag.name, arrival_value=arrival_value,
+            victim=victim.task, victim_pe=victim.pe,
+            victim_value=victim_value, displaced=tuple(lost),
+            checkpoint_seconds=ck_s, restore_seconds=rs_s,
+            resume_floor=resume_floor,
+            wall_seconds=time.perf_counter() - t0)
+        self.preemptions.append(rep)
+        if self.sanitizer is not None:
+            self.sanitizer.check_overrides()
+        return rep
 
     # -- the event loop -------------------------------------------------------
     def step(self) -> Optional[Assignment]:
         """One event: admit due arrivals, place one task. None when no
         placeable work remains (drained, or only far-future arrivals that
         were all admitted — impossible — so: fully drained)."""
-        self._admit_due()
+        if self._n_pending:
+            self._admit_due()
         eng = self.eng
         if eng.done():
             return None
@@ -1051,7 +1249,10 @@ class OnlineDriver:
             lost_exec_seconds=sum(r.lost_exec_seconds
                                   for r in self.recoveries),
             cancelled=list(self.cancelled_instances),
-            shed=list(self.shed_instances))
+            shed=list(self.shed_instances),
+            n_preemptions=self.n_preemptions,
+            n_displaced=self.n_displaced,
+            n_batched_steps=self.n_batched_steps)
 
 
 def run_online(workload: PipelineDAG, pool: ResourcePool,

@@ -647,8 +647,13 @@ class _Engine:
 
     def take_newly_ready(self) -> List[int]:
         """Drain the ids that became ready since the last call (policies
-        push fresh (task, PE) candidates for exactly these)."""
+        push fresh (task, PE) candidates for exactly these). An empty
+        drain hands back the live (empty) list without allocating — this
+        runs up to twice per online step (gate peek + placement), so the
+        no-op case must stay allocation-free."""
         out = self._newly
+        if not out:
+            return out
         self._newly = []
         return out
 
@@ -1486,32 +1491,73 @@ class OnlineEngine(_Engine):
         ``arrival_t`` (every task's arrival floor). Returns the new dense
         task ids (contiguous). O(instance size · |PE|), independent of how
         many tasks were admitted before."""
-        idx = dag.index()
+        return self.admit_batch((dag,), (arrival_t,))[0]
+
+    def admit_batch(self, dags: Sequence[PipelineDAG],
+                    arrival_ts: Sequence[float]) -> List[List[int]]:
+        """Fold ``k`` pipeline instances into the live problem in one call.
+
+        State after the call is identical to ``k`` sequential
+        :meth:`admit` calls in the same order — per-task state is
+        extended per instance in admission order and the newly-ready
+        marks land per instance in topo order — but the per-admission
+        fixed costs are paid once: one concatenated
+        :meth:`~repro.core.cost_model.CostModel.exec_time_batch` /
+        ``energy_batch`` call grows the cost tables for every new task
+        together (elementwise tables + in-order persistent
+        :func:`~repro.core.cost_model.row_ids` registries make the rows
+        and ids bitwise-identical to per-instance calls), and the caller
+        pays one selector rebuild/advertise sweep for the whole batch
+        instead of k. Returns one contiguous tid list per instance."""
         di = self._di
         id_of = di.id_of
-        for nm in idx.names:
-            if nm in id_of:
-                raise ValueError(f"duplicate task {nm!r} in online admission")
-        arrival_t = float(arrival_t)
-        base = len(di.names)
-        di.tasks.extend(idx.tasks)
-        for i, nm in enumerate(idx.names):
-            id_of[nm] = base + i
-        di.names.extend(idx.names)
-        di.preds.extend(tuple(base + p for p in row) for row in idx.preds)
-        di.succs.extend(tuple(base + s for s in row) for row in idx.succs)
-        di.topo.extend(base + t for t in idx.topo)
-        n_new = len(idx.names)
-        self._arr.extend([arrival_t] * n_new)
-        self._finish.extend([None] * n_new)
-        self._placed.extend([None] * n_new)
-        self._placed_loc.extend([None] * n_new)
-        self._ready_at.extend([None] * n_new)
-        self._n_preds_left.extend(len(row) for row in idx.preds)
-        for row in self._plans.values():  # det: ok in-place row extension; order-free
-            row.extend([None] * n_new)
-        if self._exec_tbl is not None:
-            E = self.cost.exec_time_batch(idx.tasks, self._pi.pes)
+        idxs = [dag.index() for dag in dags]
+        if len(idxs) != len(arrival_ts):
+            raise ValueError("admit_batch: len(dags) != len(arrival_ts)")
+        # validate the whole batch up front (incl. intra-batch duplicates)
+        # so a rejected admission cannot leave the batch half-applied
+        batch_names: set = set()
+        for idx in idxs:
+            for nm in idx.names:
+                if nm in id_of or nm in batch_names:
+                    raise ValueError(
+                        f"duplicate task {nm!r} in online admission")
+                batch_names.add(nm)
+        ready = self._ready
+        ready_at = self._ready_at
+        newly = self._newly
+        out: List[List[int]] = []
+        all_tasks: List[Task] = []
+        for idx, arrival_t in zip(idxs, arrival_ts, strict=True):
+            arrival_t = float(arrival_t)
+            base = len(di.names)
+            di.tasks.extend(idx.tasks)
+            for i, nm in enumerate(idx.names):
+                id_of[nm] = base + i
+            di.names.extend(idx.names)
+            di.preds.extend(tuple(base + p for p in row) for row in idx.preds)
+            di.succs.extend(tuple(base + s for s in row) for row in idx.succs)
+            di.topo.extend(base + t for t in idx.topo)
+            n_new = len(idx.names)
+            self._arr.extend([arrival_t] * n_new)
+            self._finish.extend([None] * n_new)
+            self._placed.extend([None] * n_new)
+            self._placed_loc.extend([None] * n_new)
+            self._ready_at.extend([None] * n_new)
+            npl = self._n_preds_left
+            npl.extend(len(row) for row in idx.preds)
+            for row in self._plans.values():  # det: ok in-place row extension; order-free
+                row.extend([None] * n_new)
+            all_tasks.extend(idx.tasks)
+            for t in idx.topo:
+                tid = base + t
+                if npl[tid] == 0:
+                    ready[tid] = None
+                    ready_at[tid] = arrival_t
+                    newly.append(tid)
+            out.append(list(range(base, base + n_new)))
+        if self._exec_tbl is not None and all_tasks:
+            E = self.cost.exec_time_batch(all_tasks, self._pi.pes)
             self._exec_tbl.extend(E.tolist())
             self._exec_row_ids.extend(row_ids(E, self._row_seen))
             if self._energy_tbl is not None:
@@ -1521,17 +1567,7 @@ class OnlineEngine(_Engine):
                 En = E * power[None, :]
                 self._energy_tbl.extend(En.tolist())
                 self._energy_row_ids.extend(row_ids(En, self._erow_seen))
-        ready = self._ready
-        ready_at = self._ready_at
-        npl = self._n_preds_left
-        newly = self._newly
-        for t in idx.topo:
-            tid = base + t
-            if npl[tid] == 0:
-                ready[tid] = None
-                ready_at[tid] = arrival_t
-                newly.append(tid)
-        return list(range(base, base + n_new))
+        return out
 
     # -- elastic re-plan ------------------------------------------------------
     def repool(self, new_pool: ResourcePool) -> None:
@@ -1904,9 +1940,85 @@ class OnlineEngine(_Engine):
 # Policies
 # ---------------------------------------------------------------------------
 
-def _rank(dag: PipelineDAG, pool: ResourcePool, cost: CostModel) -> Dict[str, float]:
+def _rank_scalar(dag: PipelineDAG, pool: ResourcePool,
+                 cost: CostModel) -> Dict[str, float]:
     return dag.upward_rank(lambda t: cost.mean_exec_time(t, pool),
                            lambda t: cost.mean_comm_time(t, pool))
+
+
+def _rank(dag: PipelineDAG, pool: ResourcePool, cost: CostModel) -> Dict[str, float]:
+    """Upward rank of every task — the NumPy fast path of
+    :func:`_rank_scalar`, bitwise-identical to it (pinned in
+    tests/test_online.py).
+
+    Per-admission ranking was the dominant fixed admission cost in the
+    online driver (a Python double loop over PEs and location pairs per
+    task). Here the mean-exec row comes from one ``exec_time_batch``
+    call accumulated PE-by-PE (left-to-right, matching ``sum``'s
+    0-started fold — ``0.0 + x == x``), the mean-comm row accumulates
+    the exact per-pair expression ``latency + out_bytes / bandwidth`` in
+    the same nested location order as :meth:`CostModel.mean_comm_time`,
+    and only the O(V+E) critical-path recurrence stays a Python loop
+    (array lookups, same ``max``-comparison order). Subclassed cost
+    models (e.g. :class:`LearnedCostModel`) fall back to the scalar
+    path, as does any task row without a calibrated rate (the scalar
+    path raises its KeyError)."""
+    if (type(cost).exec_time is not CostModel.exec_time
+            or type(cost).mean_exec_time is not CostModel.mean_exec_time
+            or type(cost).mean_comm_time is not CostModel.mean_comm_time):
+        return _rank_scalar(dag, pool, cost)
+    import numpy as np
+    idx = dag.index()
+    n = len(idx.names)
+    if n == 0:
+        return {}
+    pes = pool.pes
+    if not pes:
+        return _rank_scalar(dag, pool, cost)
+    E = cost.exec_time_batch(idx.tasks, pes)
+    if np.isnan(E).any():
+        return _rank_scalar(dag, pool, cost)  # scalar exec_time raises
+    acc = E[:, 0].copy()
+    for j in range(1, len(pes)):
+        acc += E[:, j]
+    mean_exec = (acc / float(len(pes))).tolist()
+    # mean cross-location shipping cost of out_bytes, per task
+    mean_comm = [0.0] * n
+    locs = pool.locations
+    if len(locs) >= 2:
+        pairs = [pool.link(a, b) for a in locs for b in locs
+                 if a != b and pool.link(a, b) is not None]
+        if pairs:
+            ob = np.asarray([t.out_bytes for t in idx.tasks],
+                            dtype=np.float64)
+            pos = np.flatnonzero(ob > 0.0)
+            if pos.size:
+                obp = ob[pos]
+                comm = np.zeros(pos.size, dtype=np.float64)
+                for lk in pairs:
+                    comm += lk.latency + obp / lk.bandwidth
+                comm /= float(len(pairs))
+                cl = comm.tolist()
+                for k, i in enumerate(pos.tolist()):
+                    mean_comm[i] = cl[k]
+    # HEFT upward-rank recurrence over the reversed topo order — same
+    # comparison sequence as max(generator, default=0.0)
+    rank = [0.0] * n
+    succs = idx.succs
+    for i in reversed(idx.topo):
+        row = succs[i]
+        if row:
+            c = mean_comm[i]
+            best = c + rank[row[0]]
+            for s in row[1:]:
+                v = c + rank[s]
+                if v > best:
+                    best = v
+        else:
+            best = 0.0
+        rank[i] = mean_exec[i] + best
+    names = idx.names
+    return {names[i]: rank[i] for i in range(n)}
 
 
 # ---------------------------------------------------------------------------
@@ -2123,6 +2235,20 @@ class _MinminRun(_ClassedRun):
         return key, sigfn, offfn, (2,), False
 
 
+def _dag_instance_ids(dag: PipelineDAG) -> Tuple[str, ...]:
+    """Distinct instance ids of ``dag``'s tasks, sorted — memoised on the
+    DAG (keyed by its mutation version): the VoS admission gate evaluates
+    per-instance floors every time the gate heap is rebuilt, and the
+    set-build + sort over all task names dominated that cost for
+    long-pending bursts."""
+    cached = getattr(dag, "_inst_ids_cache", None)
+    if cached is not None and cached[0] == dag._version:
+        return cached[1]
+    ids = tuple(sorted({instance_id(nm) for nm in dag.index().names}))
+    dag._inst_ids_cache = (dag._version, ids)
+    return ids
+
+
 class _VosRun(_ClassedRun):
     """VoS-greedy over structured per-instance value curves.
 
@@ -2254,7 +2380,7 @@ class _VosRun(_ClassedRun):
             # usable bound; otherwise admit unconditionally
             return -c.value(t) if c is not None else float("-inf")
         best = None
-        for inst in sorted({instance_id(nm) for nm in dag.index().names}):
+        for inst in _dag_instance_ids(dag):
             c = self.curves.get(inst, self.default_curve)
             if c is None:
                 if self._pool_default[0] is None:
@@ -2373,6 +2499,7 @@ class _EtfRun(_PolicyRun):
         super().__init__(eng)
         self._fin: Optional[Callable[[int, int], float]] = None
         self._pe_names: List[str] = []
+        self._plan_rows: Optional[List[List]] = None
         self._heap: List[float] = []   # distinct ready_at values
         self._buckets: Dict[float, List[Tuple[str, int]]] = {}
 
@@ -2380,6 +2507,7 @@ class _EtfRun(_PolicyRun):
         # repool re-marked the full ready set newly-ready — rebuild the
         # readiness structure from scratch so nothing is double-inserted
         self._fin = None
+        self._plan_rows = None
         self._heap = []
         self._buckets = {}
 
@@ -2406,7 +2534,10 @@ class _EtfRun(_PolicyRun):
         if self._fin is None:
             self._fin = eng._finish_fn()
             self._pe_names = [p.name for p in eng._pi.pes]
-        fin = self._fin
+            fast = eng._exec_tbl is not None and eng.contended_links
+            self._plan_rows = ([eng._plan_row(loc)
+                                for loc in eng._pi.pe_location]
+                               if fast else None)
         self._drain()
         heap = self._heap
         r = heap[0]
@@ -2415,9 +2546,67 @@ class _EtfRun(_PolicyRun):
         if not b:
             heapq.heappop(heap)
             del self._buckets[r]
+        # manual argmin over (finish, pe name): same first-minimum result
+        # as min(range(n_pes), key=...) without a tuple allocation and a
+        # lambda frame per PE. On the fast engine the finish expression is
+        # inlined with the per-*task* work (frozen ready_at, plan rows)
+        # hoisted out of the per-PE loop — identical float ops to
+        # _finish_fn, which stays the reference (and the fallback when the
+        # cost model is subclassed or links are uncontended). This scan
+        # runs once per placement and was the hottest path behind the etf
+        # online/batch overhead ratio.
         pe_names = self._pe_names
-        best_pj = min(range(eng.n_pes),
-                      key=lambda pj: (fin(tid, pj), pe_names[pj]))
+        plan_rows = self._plan_rows
+        if plan_rows is None:
+            fin = self._fin
+            best_pj = 0
+            best_f = fin(tid, 0)
+            best_nm = pe_names[0]
+            for pj in range(1, eng.n_pes):
+                f = fin(tid, pj)
+                if f < best_f or (f == best_f and pe_names[pj] < best_nm):
+                    best_f = f
+                    best_nm = pe_names[pj]
+                    best_pj = pj
+            eng._place_i(tid, best_pj)
+            return tid
+        pe_free = eng._pe_free
+        lf_get = eng.link_free.get
+        exec_row = eng._exec_tbl[tid]
+        r_at = eng._ready_at[tid]
+        if r_at is None:
+            r_at = eng._ready_at_i(tid)
+        plan = eng._plan
+        pe_loc = eng._pi.pe_location
+        fin = self._fin
+        best_pj = -1
+        best_f = 0.0
+        best_nm = ""
+        for pj in range(eng.n_pes):
+            hold = pe_free[pj]
+            if r_at > hold:
+                hold = r_at
+            t = hold
+            pl = plan_rows[pj][tid]
+            if pl is None:
+                pl = plan(tid, pe_loc[pj])
+            for lk, dur in pl:
+                s = lf_get(lk, 0.0)
+                if s < hold:
+                    s = hold
+                a = s + dur
+                if a > t:
+                    t = a
+            v = exec_row[pj]
+            if v != v:
+                f = fin(tid, pj)  # raises KeyError for missing rates
+            else:
+                f = t + v
+            if best_pj < 0 or f < best_f or (f == best_f
+                                             and pe_names[pj] < best_nm):
+                best_f = f
+                best_nm = pe_names[pj]
+                best_pj = pj
         eng._place_i(tid, best_pj)
         return tid
 

@@ -148,6 +148,39 @@ class ValueCurve:
                     v = nxt
         return v
 
+    def value_batch(self, finishes) -> "object":
+        """Vectorised :meth:`value` over an array of finish times.
+
+        Returns a float64 ``numpy.ndarray``, bitwise-identical per element
+        to the scalar method (``searchsorted(side="right")`` is the array
+        form of ``bisect_right``, and the affine evaluation + clamp run
+        the same float expressions elementwise) — pinned in
+        tests/test_vos_curves.py. Used for floor/telemetry sweeps over
+        whole pending sets (e.g. value accounting in
+        benchmarks/bench_online.py) where per-finish Python calls
+        dominate."""
+        import numpy as np
+        f = np.asarray(finishes, dtype=np.float64)
+        breaks = np.asarray(self.breaks, dtype=np.float64)
+        values = np.asarray(self.values, dtype=np.float64)
+        slopes = np.asarray(self.slopes, dtype=np.float64)
+        i = np.searchsorted(breaks, f, side="right")
+        v = values[i]
+        s = slopes[i]
+        sloped = s != 0.0
+        if sloped.any():
+            # anchor of segment i is breaks[i-1], 0.0 for the first
+            anchors = np.concatenate(([0.0], breaks))
+            b = anchors[i]
+            v = np.where(sloped, v + (f - b) * s, v)
+            # absorb the last-ulp dip below the next anchor (same clamp
+            # as the scalar path; the last segment has no next anchor)
+            inner = sloped & (i < len(breaks))
+            if inner.any():
+                nxt = np.concatenate((values[1:], [-_INF]))[i]
+                v = np.where(inner & (v < nxt), nxt, v)
+        return v
+
     def segment(self, finish: float
                 ) -> Tuple[float, float, float, float, Optional[float]]:
         """``(anchor, value_at_anchor, slope, end, clamp)`` of the segment

@@ -318,3 +318,86 @@ def test_chaos_site_events_differential(seed, n_ops, policy):
         horizon_events=events,
     )
     assert _tuples(sched_a) == _tuples(drv_b.run())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_ops=st.integers(min_value=1, max_value=4),
+)
+def test_chaos_preemption_vs_partition_differential(seed, n_ops):
+    """Value-aware preempting admissions racing site partitions/heals:
+    whatever interleaving the fuzzer picks, the drain stays byte-identical
+    to ``restart_from_history`` on the durable record (floors + horizon
+    events + curves), every surviving task is placed exactly once, and
+    displaced victims restart at/after their priced resume floors."""
+    from repro.core.vos import ValueCurve
+
+    fed = paper_federation(n_arm=2, n_xeon=2)
+    cost = CostModel(data_home=fed.data_home)
+    drv = OnlineDriver(fed, cost, policy="vos")
+    wl = _template(seed)
+    cold = ValueCurve.linear_decay(4e4, 9e4, value=0.2)
+    for i in range(N_INSTANCES):
+        drv.submit(wl.instance(i), arrival_t=i * 3.0, curve=cold)
+    rng = np.random.default_rng(seed + 7)
+    t = 0.0
+    idx = N_INSTANCES
+    reports = []
+    for _ in range(n_ops):
+        for _ in range(int(rng.integers(1, 8))):
+            if drv.step() is None and not drv.pending:
+                break
+        if drv.eng.assignments:
+            t = max(t, max(a.start for a in drv.eng.assignments))
+        t += float(rng.uniform(0.1, 30.0))
+        cut = "dc" in drv._partition_saved
+        r = rng.random()
+        if cut and r < 0.5:
+            t += float(rng.uniform(0.0, 80.0))  # within or past the window
+            drv.heal(t, "dc")
+        elif not cut and r < 0.4:
+            drv.partition(t, "dc")
+        else:
+            hot = ValueCurve.linear_decay(t + 5e4, t + 9e4, value=50.0)
+            reports.append(drv.admit_preempting(wl.instance(idx), t,
+                                                curve=hot))
+            idx += 1
+
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    cancelled = list(drv.cancelled_instances)
+    events = list(drv.horizon_events)
+    curves = drv.slo_curves()
+    sched_a = drv.run()
+
+    names = [a.task for a in sched_a.assignments]
+    assert len(names) == len(set(names))
+    must_place = {
+        t_.name for inst in drv.instances for t_ in inst.dag.tasks
+    } | {t_.name for dag, _t in pending for t_ in dag.tasks}
+    assert sorted(names) == sorted(must_place)
+    by_task = {a.task: a for a in sched_a.assignments}
+    for rep in reports:
+        if rep.victim is not None:
+            assert by_task[rep.victim].start >= rep.resume_floor - 1e-9
+    assert drv.n_preemptions == sum(1 for r in reports
+                                    if r.victim is not None)
+
+    drv_b = restart_from_history(
+        drv.pool,
+        cost,
+        "vos",
+        admitted,
+        history,
+        pending,
+        loc_of,
+        retry_floors=floors,
+        cancelled=cancelled,
+        horizon_events=events,
+        curves=curves,
+    )
+    assert _tuples(sched_a) == _tuples(drv_b.run())

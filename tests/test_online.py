@@ -22,6 +22,7 @@ Three pillars:
     accepted.
 """
 
+import heapq
 import json
 import os
 
@@ -35,6 +36,7 @@ from repro.core.online import OnlineDriver, restart_from_history, run_online
 from repro.core.resources import paper_pool
 from repro.core.schedulers import POLICIES, assignment_digest
 from repro.core.simulator import run_instances
+from repro.core.vos import ValueCurve
 from repro.pipeline.workloads import ds_workload
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sched.json")
@@ -316,3 +318,377 @@ def test_stepwise_interleaves_with_batch_result():
     res = drv.result()
     assert res.makespan == batch.makespan
     assert res.policy == "etf"
+
+
+# ---------------------------------------------------------------------------
+# Batched admission (PR 9)
+# ---------------------------------------------------------------------------
+
+class _SerialAdmissionDriver(OnlineDriver):
+    """Reference driver with the pre-batching serial admission loop: pop
+    one gate entry, re-peek, pop the next. The batched sweep in
+    ``OnlineDriver._admit_due`` may admit a whole ``floor <= best``
+    prefix against one peek — these differentials pin that the resulting
+    *placements* are byte-identical anyway."""
+
+    def _admit_due(self):
+        pol = self.policy
+        eng = self.eng
+        while self._n_pending:
+            if not (pol.deferrable and eng._ready):
+                t, seq, dag = self._pop_earliest()
+                if self._gate is not None:
+                    self._dead_gate.add(seq)
+                self._n_pending -= 1
+                self._admit_now(dag, t)
+                continue
+            gate = self._gate
+            if gate is None:
+                gate = self._gate = []
+                self._dead_gate.clear()
+                dead = self._dead_pending
+                for t, seq, dag in self._pending:
+                    if seq not in dead:
+                        heapq.heappush(
+                            gate, (pol.arrival_floor(t, dag), t, seq, dag))
+            dead_gate = self._dead_gate
+            while gate and gate[0][2] in dead_gate:
+                dead_gate.discard(heapq.heappop(gate)[2])
+            if not gate:
+                break
+            floor, t, seq, dag = gate[0]
+            best = pol.peek_time()
+            if best is not None and floor > best:
+                break
+            heapq.heappop(gate)
+            self._dead_pending.add(seq)
+            self._drain_pending()
+            self._n_pending -= 1
+            self._admit_now(dag, t)
+
+
+def _bursty_ts(n, seed, mean_gap=4.0, max_burst=6):
+    """Tiny deterministic bursty trace: coincident Zipf bursts separated
+    by Pareto gaps (the shape the scale benchmark uses)."""
+    rng = np.random.default_rng(seed)
+    ts, t = [], 0.0
+    while len(ts) < n:
+        k = int(min(rng.zipf(2.0), max_burst))
+        t += mean_gap * (float(rng.pareto(1.5)) + 0.1)
+        ts.extend([t] * k)
+    return ts[:n]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_batched_admission_matches_serial(policy):
+    """Bursty coincident arrivals through the batched gate == the serial
+    one-at-a-time reference, for every policy."""
+    wl = ds_workload()
+    cost = CostModel()
+    ts = _bursty_ts(10, seed=5)
+    scheds = {}
+    for cls in (OnlineDriver, _SerialAdmissionDriver):
+        drv = cls(paper_pool(), cost, policy=policy)
+        for i, at in enumerate(ts):
+            drv.submit(wl.instance(i), arrival_t=at)
+        scheds[cls] = (drv, drv.run())
+    assert (_assignment_tuples(scheds[OnlineDriver][1])
+            == _assignment_tuples(scheds[_SerialAdmissionDriver][1]))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_coincident_burst_drains_in_one_sweep(policy):
+    """k coincident arrivals: the batched driver must actually batch
+    (telemetry counter) and still match the serial reference."""
+    wl = ds_workload()
+    cost = CostModel()
+    drvs = {}
+    for cls in (OnlineDriver, _SerialAdmissionDriver):
+        drv = cls(paper_pool(), cost, policy=policy)
+        for i in range(8):
+            drv.submit(wl.instance(i), arrival_t=0.0)
+        drvs[cls] = (drv, drv.run())
+    drv_b, sched_b = drvs[OnlineDriver]
+    assert (_assignment_tuples(sched_b)
+            == _assignment_tuples(drvs[_SerialAdmissionDriver][1]))
+    assert drv_b.n_batched_steps >= 1
+    assert drvs[_SerialAdmissionDriver][0].n_batched_steps == 0
+    assert drv_b.result().n_batched_steps == drv_b.n_batched_steps
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       policy=st.sampled_from(POLICIES))
+def test_batched_admission_differential_hypothesis(seed, policy):
+    """Random template x random bursty trace x every policy: batched
+    admission == serial admission, assignment for assignment."""
+    wl = _random_template(seed)
+    pool = paper_pool(n_arm=2, n_xeon=2)
+    cost = CostModel()
+    ts = _bursty_ts(8, seed=seed + 1)
+    out = []
+    for cls in (OnlineDriver, _SerialAdmissionDriver):
+        drv = cls(pool, cost, policy=policy)
+        for i, at in enumerate(ts):
+            drv.submit(wl.instance(i), arrival_t=at)
+        out.append(_assignment_tuples(drv.run()))
+    assert out[0] == out[1]
+
+
+def test_batched_drain_value_order_mid_drain():
+    """A later-submitted pending instance with a hotter curve outranks an
+    earlier one inside a single coincident-burst sweep: the drain is
+    floor-ordered, not submit-ordered, and matches the serial gate."""
+    wl = ds_workload()
+    cost = CostModel()
+    cold = ValueCurve.linear_decay(10.0, 30.0, value=0.2)
+    hot = ValueCurve.linear_decay(500.0, 900.0, value=5.0)
+    curves = [cold, cold, hot, cold, hot]
+    out = []
+    for cls in (OnlineDriver, _SerialAdmissionDriver):
+        drv = cls(paper_pool(), cost, policy="vos")
+        for i, c in enumerate(curves):
+            drv.submit(wl.instance(i), arrival_t=0.0, curve=c)
+        out.append((drv, _assignment_tuples(drv.run())))
+    assert out[0][1] == out[1][1]
+    # the hot instances' first tasks beat every cold instance's
+    first_of = {}
+    for tup in out[0][1]:
+        inst = tup[0].rsplit("#", 1)[1]
+        first_of.setdefault(inst, len(first_of))
+    assert max(first_of["2"], first_of["4"]) < min(
+        first_of["0"], first_of["1"], first_of["3"])
+
+
+@pytest.mark.parametrize("policy", ["eft", "etf", "vos"])
+def test_batch_spans_fail_boundary(policy):
+    """A failure lands while coincident bursts are still pending: the
+    continued run (batched re-admissions included) must equal a restart
+    on the durable record."""
+    wl = ds_workload()
+    cost = CostModel()
+    drv = OnlineDriver(paper_pool(), cost, policy=policy)
+    ts = [0.0] * 4 + [30.0] * 4 + [1e5] * 4
+    for i, at in enumerate(ts):
+        drv.submit(wl.instance(i), arrival_t=at)
+    for _ in range(20):
+        assert drv.step() is not None
+    t_fail = max(a.start for a in drv.eng.assignments)
+    drv.fail(t_fail, ["xeon1"])
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    assert pending  # the far-future burst is still pending at the fail
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    cancelled = list(drv.cancelled_instances)
+    sched_a = drv.run()
+    drv_b = restart_from_history(drv.pool, cost, policy, admitted, history,
+                                 pending, loc_of, retry_floors=floors,
+                                 cancelled=cancelled)
+    assert _assignment_tuples(sched_a) == _assignment_tuples(drv_b.run())
+
+
+@pytest.mark.parametrize("policy", ["eft", "etf_hwang", "minmin"])
+def test_batch_spans_repool_boundary(policy):
+    """A mid-run shrink with coincident bursts still pending: batched
+    re-admission after the rebind equals restart-from-history."""
+    wl = ds_workload()
+    cost = CostModel()
+    pool = paper_pool()
+    drv = OnlineDriver(pool, cost, policy=policy)
+    ts = [0.0] * 5 + [25.0] * 5 + [5e4] * 2
+    for i, at in enumerate(ts):
+        drv.submit(wl.instance(i), arrival_t=at)
+    for _ in range(30):
+        assert drv.step() is not None
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = {p.name: p.location for p in pool.pes}
+    new_pool = pool.without(["xeon2", "arm1"])
+    drv.repool(new_pool)
+    sched_a = drv.run()
+    drv_b = restart_from_history(new_pool, cost, policy, admitted, history,
+                                 pending, loc_of)
+    assert _assignment_tuples(sched_a) == _assignment_tuples(drv_b.run())
+
+
+# ---------------------------------------------------------------------------
+# Value-aware preemption (PR 9)
+# ---------------------------------------------------------------------------
+
+def _preempt_setup(n_cold=2, policy="vos"):
+    wl = ds_workload()
+    cost = CostModel()
+    drv = OnlineDriver(paper_pool(), cost, policy=policy)
+    cold = ValueCurve.linear_decay(2e4, 9e4, value=0.2)
+    for i in range(n_cold):
+        drv.submit(wl.instance(i), arrival_t=0.0, curve=cold)
+    for _ in range(12):
+        assert drv.step() is not None
+    return wl, cost, drv
+
+
+def test_preemption_displaces_low_value_running_task():
+    wl, cost, drv = _preempt_setup()
+    a = drv.eng.assignments[-1]
+    t = (a.start + a.finish) / 2.0  # mid-flight for at least one task
+    hot = ValueCurve.linear_decay(t + 5e4, t + 9e4, value=50.0)
+    n_before = len(drv.eng.assignments)
+    rep = drv.admit_preempting(wl.instance(7), t, curve=hot)
+    assert rep.victim is not None
+    assert rep.victim_value < rep.arrival_value
+    assert rep.victim in rep.displaced
+    assert rep.resume_floor == t + rep.checkpoint_seconds + rep.restore_seconds
+    # the victim's booking is vacated from the live record
+    assert all(x.task != rep.victim for x in drv.eng.assignments)
+    assert len(drv.eng.assignments) < n_before
+    # priced resubmission, not a failure
+    assert drv.recoveries == []
+    assert drv.retry_floors[rep.victim] == rep.resume_floor
+    assert drv.n_preemptions == 1
+    assert drv.n_displaced == len(rep.displaced) >= 1
+    # the checkpoint write occupies the victim's PE (durable raise event)
+    assert drv.horizon_events and drv.horizon_events[-1][1] == "raise"
+    assert drv.horizon_events[-1][2] == {rep.victim_pe: t
+                                         + rep.checkpoint_seconds}
+    sched = drv.run()
+    names = [x.task for x in sched.assignments]
+    assert sorted(names) == sorted(set(names))
+    # every task placed exactly once in the final record, and the victim
+    # restarts no earlier than its priced resume floor
+    victim_a = next(x for x in sched.assignments if x.task == rep.victim)
+    assert victim_a.start >= rep.resume_floor - 1e-9
+    res = drv.result()
+    assert res.n_preemptions == 1
+    assert res.n_displaced == len(rep.displaced)
+
+
+def test_preemption_restart_differential():
+    """Continuing after a preempting admission == restart_from_history on
+    the durable record (floors + horizon events + curves)."""
+    wl, cost, drv = _preempt_setup()
+    a = drv.eng.assignments[-1]
+    t = (a.start + a.finish) / 2.0
+    hot = ValueCurve.linear_decay(t + 5e4, t + 9e4, value=50.0)
+    rep = drv.admit_preempting(wl.instance(7), t, curve=hot)
+    assert rep.victim is not None
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    events = list(drv.horizon_events)
+    curves = drv.slo_curves()
+    sched_a = drv.run()
+    drv_b = restart_from_history(drv.pool, cost, "vos", admitted, history,
+                                 pending, loc_of, retry_floors=floors,
+                                 horizon_events=events, curves=curves)
+    assert _assignment_tuples(sched_a) == _assignment_tuples(drv_b.run())
+
+
+def test_preemption_no_victim_falls_through_to_submit():
+    """An arrival that outranks nothing degrades to a plain gated submit:
+    byte-identical to a driver that never called admit_preempting."""
+    wl, cost, drv = _preempt_setup()
+    t = max(x.finish for x in drv.eng.assignments) + 100.0  # nothing in flight
+    lukewarm = ValueCurve.linear_decay(t + 5e4, t + 9e4, value=0.3)
+    rep = drv.admit_preempting(wl.instance(7), t, curve=lukewarm)
+    assert rep.victim is None and rep.displaced == ()
+    assert drv.n_preemptions == 0 and drv.n_displaced == 0
+    assert drv.horizon_events == [] and drv.recoveries == []
+    sched_a = drv.run()
+
+    _, _, drv_c = _preempt_setup()
+    drv_c.submit(wl.instance(7), arrival_t=t, curve=lukewarm)
+    assert _assignment_tuples(sched_a) == _assignment_tuples(drv_c.run())
+
+
+def test_preemption_requires_structured_vos():
+    wl = ds_workload()
+    drv = OnlineDriver(paper_pool(), CostModel(), policy="eft")
+    drv.submit(wl.instance(0), arrival_t=0.0)
+    with pytest.raises(ValueError, match="vos"):
+        drv.admit_preempting(wl.instance(1), 1.0)
+
+
+def test_preemption_racing_site_partition():
+    """A preempting admission landing while the edge<->DC link is cut:
+    the victim search only sees the (floored) live record, the checkpoint
+    raise composes with the partition's defer floors in the durable event
+    log, and the combined state restarts byte-identically."""
+    from repro.core.federation import paper_federation
+
+    fed = paper_federation(n_arm=2, n_xeon=2)
+    cost = CostModel(data_home=fed.data_home)
+    drv = OnlineDriver(fed, cost, policy="vos")
+    wl = ds_workload()
+    cold = ValueCurve.linear_decay(2e4, 9e4, value=0.2)
+    for i in range(2):
+        drv.submit(wl.instance(i), arrival_t=0.0, curve=cold)
+    for _ in range(10):
+        assert drv.step() is not None
+    a = drv.eng.assignments[-1]
+    t_cut = (a.start + a.finish) / 2.0
+    drv.partition(t_cut, "dc", defer="all")
+    assert "dc" in drv._partition_saved
+    t = t_cut + 1.0
+    hot = ValueCurve.linear_decay(t + 5e4, t + 9e4, value=50.0)
+    rep = drv.admit_preempting(wl.instance(7), t, curve=hot)
+    assert rep.victim is not None
+    assert drv.n_preemptions == 1
+    # both the partition's defer events and the checkpoint raise are in
+    # the durable log; the raise is the most recent entry
+    assert drv.horizon_events[-1][1] == "raise"
+    assert drv.horizon_events[-1][2] == {rep.victim_pe: t
+                                         + rep.checkpoint_seconds}
+    history = list(drv.eng.assignments)
+    admitted = [(inst.dag, inst.arrival) for inst in drv.instances]
+    pending = drv.pending_submissions()
+    loc_of = dict(drv._loc_of)
+    floors = dict(drv.retry_floors)
+    events = list(drv.horizon_events)
+    curves = drv.slo_curves()
+    sched_a = drv.run()
+    names = [x.task for x in sched_a.assignments]
+    assert sorted(names) == sorted(set(names))
+    victim_a = next(x for x in sched_a.assignments if x.task == rep.victim)
+    assert victim_a.start >= rep.resume_floor - 1e-9
+    drv_b = restart_from_history(fed, cost, "vos", admitted, history,
+                                 pending, loc_of, retry_floors=floors,
+                                 horizon_events=events, curves=curves)
+    assert _assignment_tuples(sched_a) == _assignment_tuples(drv_b.run())
+
+
+# ---------------------------------------------------------------------------
+# Vectorised rank math (PR 9)
+# ---------------------------------------------------------------------------
+
+def test_rank_vectorized_bitwise_matches_scalar():
+    """The NumPy upward-rank fast path must be *bitwise* identical to the
+    scalar recurrence it replaces — it feeds selector keys, so an ulp of
+    drift would change placements. Probed over random templates and both
+    single-site and federated pools (the latter exercises the mean-comm
+    cross-location accumulation)."""
+    from repro.core.federation import paper_federation
+    from repro.core.schedulers import _rank, _rank_scalar
+
+    pools = [paper_pool(), paper_pool(n_arm=2, n_xeon=2),
+             paper_federation(n_arm=2, n_xeon=2).flatten()]
+    dags = [ds_workload()] + [_random_template(s) for s in range(6)]
+    cost = CostModel()
+    checked = 0
+    for pool in pools:
+        for dag in dags:
+            got = _rank(dag, pool, cost)
+            want = _rank_scalar(dag, pool, cost)
+            assert got.keys() == want.keys()
+            for k in want:
+                assert got[k] == want[k], (k, got[k].hex(), want[k].hex())
+            checked += len(want)
+    assert checked > 0
+    # subclassed cost models take the scalar path (exact, by definition)
+    lc = LearnedCostModel()
+    dag = dags[1]
+    assert _rank(dag, pools[0], lc) == _rank_scalar(dag, pools[0], lc)

@@ -500,3 +500,44 @@ def test_as_value_fn_is_the_slow_path_of_the_same_curve():
     fast = schedule(merged, pool, CostModel(), policy="vos", default_curve=c)
     slow = schedule(merged, pool, CostModel(), policy="vos", value_fn=c.as_value_fn())
     assert _tuples(fast) == _tuples(slow)
+
+
+def test_value_batch_bitwise_matches_scalar():
+    """value_batch() is the vectorised form of value(): float64-bitwise
+    identical per element, across every ctor shape and right at segment
+    boundaries (nextafter probes) where the ulp-clamp branch fires."""
+    import numpy as np
+
+    curves = list(slo_mix(12, horizon=77.7).values())
+    curves += [
+        ValueCurve.step(10.0, value=3.0),
+        ValueCurve.linear_decay(20.0, 60.0, value=2.0),
+        ValueCurve.linear_decay(1e-3, 1e3 + 1e-7),
+        ValueCurve.exponential(13.0, value=4.0, segments=16),
+        ValueCurve.exponential(13.0, segments=3),
+        ValueCurve.constant(1.5),
+    ]
+    rng = np.random.default_rng(0)
+    for c in curves:
+        probes = [0.0]
+        for b in c.breaks:
+            probes += [
+                math.nextafter(b, -math.inf),
+                b,
+                math.nextafter(b, math.inf),
+                b * 0.5,
+                b * 0.99,
+                b * 1.01,
+            ]
+        hi = max(c.breaks, default=1.0) * 3.0
+        probes += [hi] + list(rng.uniform(0.0, hi, size=64))
+        probes = sorted(p for p in probes if p >= 0.0)
+        got = c.value_batch(probes)
+        want = np.array([c.value(p) for p in probes], dtype=np.float64)
+        assert got.dtype == np.float64
+        # bitwise, not allclose: the batch path must run the same float
+        # expressions as the scalar path
+        assert np.array_equal(got.view(np.uint64), want.view(np.uint64)), c
+        # scalars and 0-d arrays round-trip too
+        assert float(c.value_batch(probes[len(probes) // 2])) == c.value(
+            probes[len(probes) // 2])
