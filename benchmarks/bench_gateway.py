@@ -1,0 +1,279 @@
+"""Closed-loop serving-gateway benchmark: SLO tiers on the online driver.
+
+    PYTHONPATH=src python benchmarks/bench_gateway.py \
+        [--smoke] [--n 1000000] [--seed 0] [--out BENCH_sched.json] \
+        [--capture-golden] [--max-event-us 0]
+
+Replays a heavy-tailed bursty + diurnal arrival trace
+(``repro.serve.gateway.synth_requests``: Zipf(2) burst sizes ×
+Pareto(1.5) gaps, sinusoidal diurnal rate) through the
+``ServingGateway`` — per-request tier curves, floor-ordered admission,
+value-aware shedding, interactive-over-best-effort preemption — and
+reports goodput, shed rate, preemption count, per-tier SLO attainment
+and per-event runtime cost.
+
+Tiers:
+
+  * ``--smoke`` (CI): a small overloaded trace where shedding *and*
+    preemption both fire; checks the schedule digest + serving metrics
+    against tests/golden_gateway.json, absolute per-tier SLO-attainment
+    floors, and the restart-from-durable-record differential (snapshot at
+    a window boundary, restore, finish the trace — must be
+    byte-identical). Runs sanitize-on in CI. Exit 1 on any divergence.
+  * ``--n N``: the scale tier at the millions-of-requests/day operating
+    point (24 slots provisioned for the *mean* arrival rate, so the
+    diurnal peak plus bursts push it into overload and the gateway has
+    real shedding/preemption work to do).
+
+With ``--out`` the results are merged into BENCH_sched.json under a
+``"gateway"`` key (other sections stay untouched).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "..", "tests",
+                      "golden_gateway.json")
+
+#: absolute per-tier SLO-attainment floors for the smoke trace — a
+#: semantic gate on top of the byte-identity one: even under overload the
+#: gateway must keep interactive attainment high by shedding/preempting
+#: the cheap tiers first
+SMOKE_ATTAINMENT_FLOORS = {"interactive": 0.90, "batch": 0.75}
+
+
+def smoke_setup():
+    from repro.serve.engine import EngineConfig
+    from repro.serve.gateway import GatewayConfig
+    ecfg = EngineConfig(max_batch=4, prefill_cost_per_tok=2e-4,
+                        decode_cost_per_tok=0.02)
+    gcfg = GatewayConfig(ecfg=ecfg, window_s=2.0, shed_backlog_s=3.0,
+                         preempt_backlog_s=2.0,
+                         max_preempt_probes_per_window=4)
+    return gcfg, dict(n=1200, seed=0, mean_gap=1.2)
+
+
+def scale_setup():
+    from repro.serve.engine import EngineConfig
+    from repro.serve.gateway import GatewayConfig
+    ecfg = EngineConfig(max_batch=24, prefill_cost_per_tok=2e-4,
+                        decode_cost_per_tok=0.02)
+    # shedding only runs at window closes, so the shed control loop
+    # needs tight windows AND a shed horizon under the interactive hard
+    # deadline (8 s at slo_unit=2) — otherwise the diurnal peak parks
+    # the backlog above every interactive budget and attainment
+    # inverts. Preemption cost is decoupled from the window cadence by
+    # the sim-time probe interval (each probe is O(history), see
+    # GatewayConfig), and slo_quantum shares one shifted tier curve per
+    # half-second of arrivals to keep candidate classes few at 10⁶ rids
+    gcfg = GatewayConfig(ecfg=ecfg, window_s=5.0, shed_backlog_s=3.0,
+                         preempt_backlog_s=8.0,
+                         preempt_min_interval_s=600.0, slo_quantum=0.5)
+    return gcfg, dict(mean_gap=0.175)
+
+
+def run_gateway(gcfg, n, seed, mean_gap, sanitize=None):
+    """Build the trace (not charged to the runtime), run the gateway,
+    return (report, gateway, specs)."""
+    from repro.serve.gateway import ServingGateway, synth_requests
+    specs = synth_requests(n, seed=seed, mean_gap=mean_gap)
+    gw = ServingGateway(gcfg, sanitize=sanitize)
+    rep = gw.run(specs)
+    return rep, gw, specs
+
+
+def report_row(rep) -> dict:
+    row = {
+        "n_requests": rep.n_requests,
+        "n_completed": rep.n_completed,
+        "n_shed": rep.n_shed,
+        "n_preemptions": rep.n_preemptions,
+        "n_displaced": rep.n_displaced,
+        "goodput": round(rep.goodput, 4),
+        "shed_rate": round(rep.shed_rate, 4),
+        "makespan_s": round(rep.makespan, 1),
+        "attainment": {t: round(r["attainment"], 4)
+                       for t, r in sorted(rep.per_tier.items())},
+        "wall_seconds": round(rep.wall_seconds, 3),
+        "per_event_us": round(1e6 * rep.wall_seconds
+                              / max(rep.n_events, 1), 2),
+    }
+    return row
+
+
+def restart_differential(gcfg, specs, sanitize=None):
+    """Snapshot at a mid-trace window boundary, restore, finish — the
+    continuation must be byte-identical to the uninterrupted run.
+    Returns a list of failure strings (empty = pass)."""
+    from repro.serve.gateway import ServingGateway
+    full = ServingGateway(gcfg, sanitize=sanitize)
+    rep_full = full.run(specs)
+    w = [int(s.arrival // gcfg.window_s) for s in specs]
+    bounds = [i for i in range(1, len(specs)) if w[i] > w[i - 1]]
+    if not bounds:
+        return ["restart differential needs >1 arrival window "
+                "(trace too short for window_s)"]
+    k = bounds[len(bounds) // 2]
+    gw1 = ServingGateway(gcfg, sanitize=sanitize)
+    for s in specs[:k]:
+        gw1.offer(s)
+    snap = gw1.snapshot()
+    gw2 = ServingGateway.restore(snap, gcfg=gcfg, sanitize=sanitize)
+    for s in specs[k:]:
+        gw2.offer(s)
+    gw2.drain()
+    rep_split = gw2.report()
+    failures = []
+    if rep_split.digest != rep_full.digest:
+        failures.append(f"restart differential: schedule diverged after "
+                        f"restore at request {k}")
+    a = dataclasses.asdict(rep_full)
+    b = dataclasses.asdict(rep_split)
+    for key in ("wall_seconds", "n_events"):  # telemetry, not the record
+        a.pop(key)
+        b.pop(key)
+    if a != b:
+        diff = sorted(key for key in a if a[key] != b[key])
+        failures.append(f"restart differential: report fields diverged "
+                        f"after restore: {diff}")
+    return failures
+
+
+def smoke(capture: bool, sanitize=None):
+    gcfg, tr = smoke_setup()
+    rep, _gw, specs = run_gateway(gcfg, sanitize=sanitize, **tr)
+    row = report_row(rep)
+    print(f"gateway-smoke,wall,{rep.wall_seconds:.3f},s  "
+          f"(completed {rep.n_completed}/{rep.n_requests}, "
+          f"shed {rep.n_shed}, preempt {rep.n_preemptions}, "
+          f"goodput {rep.goodput:.3f})")
+    failures = []
+    if rep.n_shed == 0:
+        failures.append("smoke trace no longer triggers load shedding")
+    if rep.n_preemptions == 0:
+        failures.append("smoke trace no longer triggers preemption")
+    for tier, floor in sorted(SMOKE_ATTAINMENT_FLOORS.items()):
+        att = row["attainment"][tier]
+        if att < floor:
+            failures.append(f"{tier} SLO attainment {att:.3f} < "
+                            f"floor {floor}")
+    golden = {
+        "digest": rep.digest,
+        "n_completed": rep.n_completed,
+        "n_shed": rep.n_shed,
+        "n_preemptions": rep.n_preemptions,
+        "attainment": row["attainment"],
+    }
+    if capture:
+        with open(GOLDEN, "w") as f:
+            json.dump({"smoke": golden}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"captured {os.path.normpath(GOLDEN)}")
+    elif os.path.exists(GOLDEN):
+        with open(GOLDEN) as f:
+            want = json.load(f)["smoke"]
+        if want != golden:
+            diff = sorted(key for key in want if want.get(key) != golden.get(key))
+            failures.append(f"golden mismatch vs tests/golden_gateway.json "
+                            f"in {diff} (re-capture with --capture-golden "
+                            f"only for intended schedule changes)")
+    else:
+        failures.append("tests/golden_gateway.json missing "
+                        "(run --capture-golden)")
+    failures.extend(restart_differential(gcfg, specs, sanitize=sanitize))
+    return row, failures
+
+
+def scale(n: int, seed: int, max_event_us: float):
+    gcfg, tr = scale_setup()
+    t0 = time.perf_counter()
+    rep, _gw, specs = run_gateway(gcfg, n=n, seed=seed, **tr)
+    trace_span = specs[-1].arrival - specs[0].arrival
+    row = report_row(rep)
+    row["trace_seed"] = seed
+    row["trace_span_s"] = round(trace_span, 1)
+    row["req_per_day"] = round(n * 86400.0 / max(trace_span, 1e-9))
+    row["n_slots"] = gcfg.ecfg.max_batch
+    row["total_seconds"] = round(time.perf_counter() - t0, 1)
+    print(f"gateway-scale,n{n}_wall,{rep.wall_seconds:.1f},s  "
+          f"({row['per_event_us']:.0f}us/event, "
+          f"{row['req_per_day']:.2e} req/day simulated, "
+          f"shed {rep.shed_rate:.1%}, preempt {rep.n_preemptions}, "
+          f"goodput {rep.goodput:.3f})")
+    for tier, att in row["attainment"].items():
+        print(f"gateway-scale,{tier}_attainment,{att:.4f},ratio")
+    failures = []
+    if max_event_us and row["per_event_us"] > max_event_us:
+        failures.append(f"scale n={n}: {row['per_event_us']:.1f}us/event > "
+                        f"bound {max_event_us:g}us")
+    return row, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: golden digest + attainment floors + "
+                         "restart differential on a small overloaded trace")
+    ap.add_argument("--capture-golden", action="store_true",
+                    help="rewrite tests/golden_gateway.json from this run")
+    ap.add_argument("--n", type=int, default=0,
+                    help="scale tier: replay this many requests at the "
+                         "millions/day operating point (0 = skip)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-event-us", type=float, default=0.0,
+                    help="fail the scale tier above this per-event cost "
+                         "(0 = report only)")
+    ap.add_argument("--out", default=None,
+                    help="merge results under a 'gateway' key of this JSON "
+                         "(typically BENCH_sched.json)")
+    args = ap.parse_args(argv)
+    failures: list = []
+    smoke_row = scale_row = None
+    if args.smoke or args.capture_golden:
+        smoke_row, sfail = smoke(args.capture_golden)
+        failures.extend(sfail)
+    if args.n:
+        scale_row, sfail = scale(args.n, args.seed, args.max_event_us)
+        failures.extend(sfail)
+    if args.out:
+        payload = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                payload = json.load(f)
+        meta = {
+            "trace": "synth_requests: Zipf(2) bursts x Pareto(1.5) gaps, "
+                     "diurnal sinusoid (depth 0.7), tiers "
+                     "interactive/batch/best_effort ~ 25/45/30, "
+                     "bucketed prompt/decode lengths",
+            "pipeline": "request -> prefill#rid -> decode#rid instance, "
+                        "token-cost bridge onto one PE per decode slot",
+            "policy": "vos floors; shed_pending on booked-backlog "
+                      "overload; admit_preempting for interactive "
+                      "arrivals into deep backlog",
+        }
+        section = dict(payload.get("gateway", ()))
+        section["meta"] = meta
+        if smoke_row is not None:
+            section["smoke"] = smoke_row
+        if scale_row is not None:
+            section["scale"] = scale_row
+        payload["gateway"] = section
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,10 @@
-"""Serving example: continuous batching with the paper's EFT request rule.
+"""Serving example: engine policies + the SLO-aware serving gateway.
 
-Submits a bursty trace of requests to the engine under three admission
-policies and compares latency — the paper's scheduling claim (EFT beats
-naive ordering) shows up at the request level too.
+Part 1 submits a bursty trace to the continuous-batching engine under
+three admission policies and compares latency — the paper's scheduling
+claim (EFT beats naive ordering) shows up at the request level too.
+Part 2 plans the same trace through the :class:`ServingGateway` (per-tier
+value curves on the online driver) and replays the plan into the engine.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -12,23 +14,33 @@ import numpy as np
 import jax
 
 from repro.configs import get_config
+from repro.core.vos import tier_curve
 from repro.models import model as M
-from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve import (EngineConfig, GatewayConfig, RequestSpec,
+                         ServeEngine, ServingGateway)
 
 
-def trace(cfg, n=20, seed=0):
+def trace(cfg, n=20, seed=0, absolute_curves=False):
+    """Bimodal bursty trace: many short interactive chats + a few long
+    batch generations. With ``absolute_curves`` each request carries its
+    tier curve shifted to its arrival (engine-policy form: ``edf`` reads
+    absolute hard deadlines); without, ``curve=None`` and the gateway
+    applies the tier's canonical curve itself."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
-        # bimodal: many short chats + a few long generations
         long = rng.random() < 0.25
-        reqs.append(Request(
+        tier = "batch" if long else "interactive"
+        arrival = float(i // 4) * 2.0        # bursts of 4
+        curve = (tier_curve(tier, 40.0).shifted(arrival)
+                 if absolute_curves else None)
+        reqs.append(RequestSpec(
             rid=i,
             prompt=rng.integers(2, cfg.vocab_size,
                                 size=int(rng.integers(4, 16))).astype(np.int32),
             max_new_tokens=int(rng.integers(24, 48)) if long
             else int(rng.integers(2, 8)),
-            arrival=float(i // 4) * 2.0))        # bursts of 4
+            arrival=arrival, tier=tier, curve=curve))
     return reqs
 
 
@@ -42,7 +54,7 @@ def main() -> None:
         eng = ServeEngine(cfg, params,
                           EngineConfig(max_batch=4, max_seq=96,
                                        policy=policy))
-        for r in trace(cfg):
+        for r in trace(cfg, absolute_curves=True):
             eng.submit(r)
         done = eng.run()
         st = eng.latency_stats()
@@ -52,6 +64,23 @@ def main() -> None:
               f"p95 {st['p95_latency']:7.1f}  wait {st['mean_wait']:6.1f}")
     assert results["eft"]["mean_latency"] <= results["fcfs"]["mean_latency"] * 1.05
     print("serve_lm OK (EFT ≤ FCFS mean latency)")
+
+    # part 2: SLO-aware plan (tier curves, vos admission) -> engine replay
+    ecfg = EngineConfig(max_batch=4, max_seq=96, policy="fcfs")
+    gw = ServingGateway(GatewayConfig(ecfg=ecfg, slo_unit=40.0,
+                                      window_s=10.0))
+    for r in trace(cfg):
+        gw.offer(r)
+    gw.drain()
+    rep = gw.report()
+    for tier in ("interactive", "batch"):
+        row = rep.per_tier[tier]
+        print(f"gateway {tier:<12} submitted {row['submitted']:>3}  "
+              f"attainment {row['attainment']:.2f}")
+    st = gw.serve(ServeEngine(cfg, params, ecfg))
+    assert st["n"] == rep.n_completed
+    print(f"gateway plan replayed on engine: {st['n']} requests, "
+          f"goodput {rep.goodput:.2f}")
 
 
 if __name__ == "__main__":

@@ -75,6 +75,7 @@ from repro.core.resources import ResourcePool
 from repro.core.sanitize import ScheduleSanitizer
 from repro.core.sanitize import enabled as _sanitize_enabled
 from repro.core.sanitize import validate_curve as _validate_curve
+from repro.core import vos as vos_mod
 from repro.core.schedulers import (Assignment, OnlineEngine, Schedule,
                                    make_policy_run)
 from repro.core.simulator import RunResult
@@ -285,6 +286,20 @@ class OnlineDriver:
         :func:`restart_from_history` so a rebuilt driver schedules under
         the same SLOs."""
         return dict(getattr(self.policy, "curves", ()) or {})
+
+    def backlog(self, t: float) -> Tuple[float, float]:
+        """``(mean, max)`` booked-ahead seconds over the pool's PEs at
+        time ``t`` — how far the engine's committed plan runs past "now".
+        The serving gateway's overload signal (:mod:`repro.serve.gateway`):
+        shedding and preemption trigger on it rather than on queue length,
+        because the planner books admitted work into the future instantly,
+        so the schedule horizon — not the pending count — is what measures
+        load."""
+        pe_free = self.eng._pe_free
+        if not len(pe_free):
+            return (0.0, 0.0)
+        ahead = [max(0.0, float(f) - t) for f in pe_free]
+        return (sum(ahead) / len(ahead), max(ahead))
 
     @property
     def live_instances(self) -> int:
@@ -1258,12 +1273,20 @@ class OnlineDriver:
 def run_online(workload: PipelineDAG, pool: ResourcePool,
                cost: Optional[CostModel] = None, policy: str = "eft",
                n_instances: int = 100, period: float = 0.0,
-               label: str = "", **policy_kw) -> OnlineRunResult:
+               label: str = "", curves: object = None,
+               **policy_kw) -> OnlineRunResult:
     """Streaming counterpart of :func:`repro.core.simulator.run_instances`:
     submit ``n_instances`` copies of ``workload`` (one every ``period``
     seconds) through the online driver. Produces byte-identical schedules
-    to the batch path for every policy (pinned by tests/test_online.py)."""
+    to the batch path for every policy (pinned by tests/test_online.py).
+    ``curves`` attaches per-instance SLO curves in any form
+    :func:`repro.core.vos.normalize_curves` accepts — consumed by the VoS
+    policy, ignored by the rest (the same spelling as ``run_instances``
+    and ``sweep_policies``)."""
     t0 = time.perf_counter()
+    if curves is not None and policy == "vos":
+        policy_kw.setdefault("curves",
+                             vos_mod.normalize_curves(curves, n_instances))
     drv = OnlineDriver(pool, cost, policy=policy, **policy_kw)
     for i in range(n_instances):
         drv.submit(workload.instance(i),

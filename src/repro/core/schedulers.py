@@ -120,12 +120,13 @@ import dataclasses
 import heapq
 import itertools
 import math
+import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel, row_ids
 from repro.core.dag import PipelineDAG, Task
 from repro.core.resources import DirtyHorizons, ProcessingElement, ResourcePool
-from repro.core.vos import ValueCurve, instance_id
+from repro.core.vos import ValueCurve, instance_id, normalize_curves
 
 _INF = float("inf")
 
@@ -2279,16 +2280,29 @@ class _VosRun(_ClassedRun):
             if default_curve is not None:
                 raise ValueError(
                     "pass the curve as value_fn OR default_curve, not both")
+            warnings.warn(
+                "passing a ValueCurve as value_fn= is deprecated; spell it "
+                "default_curve=", DeprecationWarning, stacklevel=4)
             default_curve = value_fn
             value_fn = None
         if value_fn is not None and (curves or default_curve is not None):
             raise ValueError(
                 "the legacy value_fn callable is exclusive with structured "
                 "curves (it disables grouping/deferral; curves do not)")
+        if value_fn is not None:
+            # retired outside the frozen reference engine: callables
+            # disable grouping, offset heaps and online deferral, and
+            # curve.as_value_fn() is the pinned slow path of the same
+            # semantics — build a ValueCurve instead
+            warnings.warn(
+                "the raw value_fn callable path is deprecated; build a "
+                "ValueCurve (curves=/default_curve=) — "
+                "ValueCurve.as_value_fn() remains the pinned slow path",
+                DeprecationWarning, stacklevel=4)
         self._custom = value_fn is not None
         self.value_fn = value_fn
         self.energy_weight = energy_weight
-        self.curves: Dict[str, ValueCurve] = dict(curves or {})
+        self.curves: Dict[str, ValueCurve] = normalize_curves(curves) or {}
         self.default_curve = default_curve
         #: pool-derived fallback curve, in a one-slot cell so key/offset
         #: closures built before the first defaulted admission still see it

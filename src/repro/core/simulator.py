@@ -21,13 +21,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import dag as dag_mod
 from repro.core.cost_model import CostModel
 from repro.core.dag import PipelineDAG
 from repro.core.resources import ResourcePool, paper_pool
 from repro.core.schedulers import Schedule, schedule
+from repro.core.vos import normalize_curves
 
 
 @dataclasses.dataclass
@@ -72,14 +73,7 @@ def merge_instances(workload: PipelineDAG, n_instances: int,
         for i, inst in enumerate(instances):
             for t in inst.tasks:
                 arrival[t.name] = i * period
-    curve_map: Dict[str, object] = {}
-    if curves is not None:
-        if callable(curves):
-            curve_map = {str(i): curves(i) for i in range(n_instances)}
-        elif isinstance(curves, Mapping):
-            curve_map = dict(curves)
-        else:
-            curve_map = {str(i): c for i, c in enumerate(curves)}
+    curve_map = normalize_curves(curves, n_instances) or {}
     return merged, arrival, curve_map
 
 
@@ -87,6 +81,7 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
                   policy: str = "eft", n_instances: int = 100,
                   period: float = 0.0, label: str = "",
                   online: bool = False, sanitize: Optional[bool] = None,
+                  curves: object = None,
                   _premerged: Optional[Tuple] = None,
                   **policy_kw) -> RunResult:
     """Submit ``n_instances`` copies of ``workload`` (all at once, or one
@@ -99,10 +94,13 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
     caller sweeps several policies over one problem; a curve map it carries
     is handed to the VoS policy (and ignored by the others).
 
-    Extra keyword arguments go to the policy — e.g.
+    ``curves`` attaches per-instance SLO curves in any form
+    :func:`repro.core.vos.normalize_curves` accepts (mapping, sequence or
+    callable) — consumed by the VoS policy, ignored by the rest, the same
+    spelling as ``run_online`` and ``sweep_policies``. E.g.
     ``run_instances(..., policy="vos", curves=slo_mix(n, horizon))`` runs a
     heterogeneous per-instance SLO sweep, batch or (``online=True``)
-    streamed.
+    streamed. Other keyword arguments go to the policy.
 
     ``online=True`` routes through the streaming driver
     (:func:`repro.core.online.run_online`): instances are admitted into a
@@ -113,6 +111,9 @@ def run_instances(workload: PipelineDAG, pool: ResourcePool, cost: CostModel,
     ``sanitize=True`` (or ``REPRO_SANITIZE=1``) validates the emitted
     schedule against :mod:`repro.core.sanitize` — online runs check every
     placement as it happens, batch runs get a whole-schedule pass."""
+    if curves is not None and policy == "vos":
+        policy_kw.setdefault("curves",
+                             normalize_curves(curves, n_instances))
     if _premerged is not None and len(_premerged) > 2 and _premerged[2] \
             and policy == "vos":
         policy_kw.setdefault("curves", _premerged[2])

@@ -204,6 +204,17 @@ class ValueCurve:
         ew = self.energy_weight or 0.0
         return self.value(finish) - ew * energy
 
+    def hard_deadline(self) -> float:
+        """Earliest finish at which the curve's value has reached 0 —
+        ``+inf`` for curves that never do (e.g. :meth:`constant`). The
+        deadline the serving engine's ``edf`` rule orders by: a curve is
+        piecewise-linear non-increasing, so once zero it stays zero, and
+        the last breakpoint is exactly where the terminal flat-0 tail
+        starts."""
+        if not self.breaks or self.values[-1] > 0.0:
+            return _INF
+        return self.breaks[-1]
+
     def as_value_fn(self) -> Callable[["Task", float], float]:
         """Adapt to the legacy ``value_fn(task, finish)`` callable shape."""
         return lambda task, finish: self.value(finish)
@@ -367,3 +378,85 @@ def slo_mix(n_instances: int, horizon: float,
             out[str(i)] = ValueCurve.exponential(h / 2, value, horizon=2 * h,
                                                  segments=6)
     return out
+
+
+#: Canonical serving tiers, strongest SLO first. The serving gateway
+#: (:mod:`repro.serve.gateway`) maps every request to one of these; the
+#: tier's curve (:func:`tier_curve`) is what flows through the online
+#: driver's admission gate, load shedding and preemption.
+TIERS: Tuple[str, ...] = ("interactive", "batch", "best_effort")
+
+
+def tier_curve(tier: str, unit: float = 1.0,
+               energy_weight: Optional[float] = None) -> ValueCurve:
+    """Canonical :class:`ValueCurve` of a serving tier.
+
+    ``unit`` is the latency-budget unit in simulated seconds — tier shapes
+    are expressed in multiples of it so one knob rescales the whole SLO
+    ladder to a deployment's service-time scale:
+
+    * ``interactive`` — value 8, flat to ``1*unit``, zero at ``4*unit``
+      (tight soft/hard window, 8x the value of a batch request — an
+      interactive arrival outranks whole groups of batch work at the
+      admission gate and can justify preempting it);
+    * ``batch`` — value 1, flat to ``8*unit``, zero at ``32*unit``;
+    * ``best_effort`` — constant value 0.1, no deadline: it never expires,
+      always floors *below* the dated tiers, and is the first thing
+      ``shed_pending`` drops under overload.
+    """
+    if tier == "interactive":
+        return ValueCurve.linear_decay(1.0 * unit, 4.0 * unit, 8.0,
+                                       energy_weight)
+    if tier == "batch":
+        return ValueCurve.linear_decay(8.0 * unit, 32.0 * unit, 1.0,
+                                       energy_weight)
+    if tier == "best_effort":
+        return ValueCurve.constant(0.1, energy_weight)
+    raise ValueError(f"unknown tier {tier!r}; one of {TIERS}")
+
+
+def tier_mix(n_instances: int, unit: float = 1.0,
+             shares: Tuple[int, ...] = (2, 5, 3)) -> Dict[str, ValueCurve]:
+    """Deterministic tiered-SLO mix (the serving analogue of
+    :func:`slo_mix`): instance ``i`` takes the tier of a cyclic pattern
+    with the given integer ``shares`` per cycle — default 2 interactive :
+    5 batch : 3 best-effort per 10 instances."""
+    pattern = [t for t, k in zip(TIERS, shares, strict=True)
+               for _ in range(k)]
+    return {str(i): tier_curve(pattern[i % len(pattern)], unit)
+            for i in range(n_instances)}
+
+
+def normalize_curves(curves: object, n_instances: Optional[int] = None
+                     ) -> Optional[Dict[str, ValueCurve]]:
+    """Normalise a ``curves=`` argument to an instance-id-keyed dict.
+
+    The one spelling every run-level entry point (``schedule_vos``,
+    ``run_instances``, ``run_online``, ``sweep_policies``) accepts:
+
+    * ``None`` — passed through (policy default curve applies);
+    * a mapping ``instance id -> ValueCurve`` — copied;
+    * a sequence of curves — keyed ``"0"``, ``"1"``, ... by position;
+    * a callable ``i -> ValueCurve`` — enumerated over ``n_instances``
+      (an error when the instance count is not known at the call site).
+
+    A single :class:`ValueCurve` is rejected with a pointer to
+    ``default_curve=`` / ``submit(curve=...)`` — silently enumerating its
+    fields would be a miserable bug to chase.
+    """
+    if curves is None:
+        return None
+    if isinstance(curves, ValueCurve):
+        raise TypeError(
+            "curves= takes a per-instance collection; pass a single curve "
+            "as default_curve= (or curve= on OnlineDriver.submit)")
+    if isinstance(curves, Mapping):
+        return dict(curves)
+    if callable(curves):
+        if n_instances is None:
+            raise TypeError(
+                "curves=<callable> needs the instance count; pass a "
+                "mapping or sequence here, or use a run-level API that "
+                "knows n_instances")
+        return {str(i): curves(i) for i in range(n_instances)}
+    return {str(i): c for i, c in enumerate(curves)}

@@ -192,3 +192,27 @@ def lm_training_pipeline(arch: str, steps_work: float = 1000.0,
     g.chain("fetch_corpus", "tokenize", "pack_batches", "train", "eval",
             "checkpoint")
     return g
+
+
+def inference_request_pipeline(rid: int, prompt_tokens: int,
+                               decode_tokens: int, *,
+                               prefill_work_per_tok: float = 1.0,
+                               decode_work_per_tok: float = 5.0,
+                               kv_bytes_per_tok: float = 0.0) -> PipelineDAG:
+    """One LM inference request as a JITA pipeline: a prefill task feeding
+    a decode task, names suffixed ``#<rid>`` so the request is a pipeline
+    *instance* (instance id ``str(rid)``) that carries its own
+    :class:`~repro.core.vos.ValueCurve` through the online driver — the
+    request→DAG mapping of the serving gateway
+    (:mod:`repro.serve.gateway`). Work is per-token cost × token count;
+    the gateway's cost-model bridge picks the per-token costs so engine
+    exec time equals the serve engine's abstract per-token clock."""
+    g = PipelineDAG(f"req{rid}")
+    g.add_task(Task(f"prefill#{rid}", "lm_prefill",
+                    work=prompt_tokens * prefill_work_per_tok,
+                    out_bytes=prompt_tokens * kv_bytes_per_tok))
+    g.add_task(Task(f"decode#{rid}", "lm_decode",
+                    work=decode_tokens * decode_work_per_tok,
+                    out_bytes=0.0))
+    g.add_edge(f"prefill#{rid}", f"decode#{rid}")
+    return g

@@ -1,7 +1,32 @@
-"""repro.serve — batched serving engine with JITA-style request scheduling."""
+"""repro.serve — SLO-aware LM serving on the JITA scheduler core.
 
-from repro.serve.serve_step import build_prefill_step, build_decode_step
-from repro.serve.engine import ServeEngine, Request, EngineConfig
+Two layers, one request type:
 
-__all__ = ["build_prefill_step", "build_decode_step",
-           "ServeEngine", "Request", "EngineConfig"]
+* :class:`ServeEngine` — the continuous-batching execution backend
+  (batched KV cache, jitted prefill/decode steps, a pluggable admission
+  rule from :data:`SERVE_POLICIES`);
+* :class:`ServingGateway` — the SLO-aware front end: maps each
+  :class:`RequestSpec` (tier + optional :class:`~repro.core.vos.ValueCurve`)
+  to a pipeline instance, runs admission / load shedding / preemption
+  through the online driver, and can replay its plan into a
+  :class:`ServeEngine` (:meth:`ServingGateway.serve`).
+
+``Request`` remains as a legacy alias of :class:`RequestSpec`; the old
+``deadline=`` float maps to ``ValueCurve.step`` with a deprecation
+warning.
+"""
+
+from repro.serve.engine import (EngineConfig, Request, RequestSpec,
+                                SERVE_POLICIES, ServeEngine)
+from repro.serve.gateway import (GatewayConfig, GatewayReport, ServingGateway,
+                                 serve_cost_model, serve_pool, synth_requests,
+                                 token_work_rates)
+from repro.serve.serve_step import build_decode_step, build_prefill_step
+
+__all__ = [
+    "EngineConfig", "Request", "RequestSpec", "SERVE_POLICIES",
+    "ServeEngine",
+    "GatewayConfig", "GatewayReport", "ServingGateway",
+    "serve_cost_model", "serve_pool", "synth_requests", "token_work_rates",
+    "build_decode_step", "build_prefill_step",
+]

@@ -2,15 +2,24 @@
 
 The engine is the serving analogue of the paper's workload manager: a pool
 of ``max_batch`` decode *slots* (the PEs), a queue of requests (the tasks),
-and an admission policy:
+and an admission policy from the :data:`SERVE_POLICIES` registry:
 
   * ``"fcfs"`` — arrival order (the RR-like baseline);
   * ``"eft"``  — the paper's Earliest-Finish-Time rule applied to requests:
     admit the waiting request with the smallest predicted finish
     (prefill_cost·prompt_len + decode_cost·max_new_tokens), which minimises
     mean latency exactly the way EFT minimised pipeline makespan;
-  * ``"edf"``  — earliest deadline first (VoS-style: each request may carry
-    a deadline; serving maximises on-time completions).
+  * ``"edf"``  — earliest deadline first over the request's
+    :class:`repro.core.vos.ValueCurve` hard deadline (no curve = no
+    deadline = ``+inf``, ordered after every dated request, deterministic
+    ``rid`` tie-break).
+
+Requests are :class:`RequestSpec`\\ s carrying a serving *tier* and an
+optional :class:`~repro.core.vos.ValueCurve` — the same SLO object the
+scheduler core uses, so the SLO-aware gateway (:mod:`repro.serve.gateway`)
+and this engine speak one language. The legacy ``deadline=`` float is
+still accepted and mapped to ``ValueCurve.step`` with a
+``DeprecationWarning``.
 
 All requests in flight share one batched KV cache at different depths
 (per-row cache indices — repro.models.kvcache); each engine tick performs
@@ -22,40 +31,106 @@ steps are the same ones a real deployment would drive asynchronously.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.vos import TIERS, ValueCurve
 from repro.models.config import ModelConfig
 from repro.serve.serve_step import (build_decode_step, build_prefill_step,
                                     init_serve_caches)
 
 
 @dataclasses.dataclass
-class Request:
+class RequestSpec:
+    """One inference request with its SLO.
+
+    ``prompt`` is the ``(S,)`` int32 token array — or a bare token *count*
+    on scheduling-only paths (the gateway's planner and benchmark never
+    materialise prompts; the engine itself requires real tokens). ``tier``
+    names the serving class (:data:`repro.core.vos.TIERS`); ``curve`` is
+    the request's own :class:`~repro.core.vos.ValueCurve` when the caller
+    wants more than the tier's canonical shape. The legacy ``deadline=``
+    float init-arg maps to ``ValueCurve.step(deadline)`` with a
+    ``DeprecationWarning``.
+    """
+
     rid: int
-    prompt: np.ndarray                 # (S,) int32
+    prompt: Any                        # (S,) int32 tokens, or int count
     max_new_tokens: int
     arrival: float = 0.0
-    deadline: Optional[float] = None
+    tier: str = "batch"
+    curve: Optional[ValueCurve] = None
+    deadline: dataclasses.InitVar[Optional[float]] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     admitted_at: Optional[float] = None
     finished_at: Optional[float] = None
 
+    def __post_init__(self, deadline: Optional[float]) -> None:
+        if self.tier not in TIERS:
+            raise ValueError(f"unknown tier {self.tier!r}; one of {TIERS}")
+        if deadline is not None:
+            warnings.warn(
+                "RequestSpec(deadline=...) is deprecated: deadlines are "
+                "ValueCurves now — pass curve=ValueCurve.step(deadline)",
+                DeprecationWarning, stacklevel=3)
+            if self.curve is None:
+                self.curve = ValueCurve.step(float(deadline))
+
     @property
     def prompt_len(self) -> int:
+        if isinstance(self.prompt, (int, np.integer)):
+            return int(self.prompt)
         return int(len(self.prompt))
+
+    @property
+    def hard_deadline(self) -> float:
+        """Finish time past which the request earns nothing — ``+inf``
+        without a curve (or for curves that never reach 0). The ``edf``
+        admission key."""
+        if self.curve is None:
+            return float("inf")
+        return self.curve.hard_deadline()
+
+
+#: Legacy name — PR 10's API redesign kept the old spelling importable.
+Request = RequestSpec
+
+
+def _key_fcfs(eng: "ServeEngine", r: RequestSpec) -> Tuple[float, int]:
+    return (r.arrival, r.rid)
+
+
+def _key_eft(eng: "ServeEngine", r: RequestSpec) -> Tuple[float, int]:
+    return (eng._predicted_finish(r), r.rid)
+
+
+def _key_edf(eng: "ServeEngine", r: RequestSpec) -> Tuple[float, int]:
+    return (r.hard_deadline, r.rid)
+
+
+#: Admission-policy registry: name → ``key(engine, request)``; the waiting
+#: request minimising the key is admitted next. Replaces the old inline
+#: string matching — unknown policies now fail at engine *construction*,
+#: and new rules register here instead of patching ``_pick``. Every key
+#: must end with ``r.rid`` so ties break deterministically.
+SERVE_POLICIES: Dict[str, Callable[["ServeEngine", RequestSpec], Tuple]] = {
+    "fcfs": _key_fcfs,
+    "eft": _key_eft,
+    "edf": _key_edf,
+}
 
 
 @dataclasses.dataclass
 class EngineConfig:
     max_batch: int = 4
     max_seq: int = 512
-    policy: str = "eft"                # fcfs | eft | edf
+    policy: str = "eft"                # a SERVE_POLICIES key
     prefill_cost_per_tok: float = 1.0  # scheduler's cost model (abstract)
     decode_cost_per_tok: float = 5.0
     capacity_factor: float = 4.0
@@ -64,6 +139,12 @@ class EngineConfig:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, ecfg: EngineConfig,
                  vision: Optional[np.ndarray] = None) -> None:
+        try:
+            self._admission_key = SERVE_POLICIES[ecfg.policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown policy {ecfg.policy!r}; one of "
+                f"{sorted(SERVE_POLICIES)}") from None
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -72,37 +153,34 @@ class ServeEngine:
         self._decode = jax.jit(build_decode_step(cfg, ecfg.capacity_factor))
         self.caches = init_serve_caches(cfg, B, ecfg.max_seq)
         self.vision = (jnp.asarray(vision) if vision is not None else None)
-        self.slots: List[Optional[Request]] = [None] * B
+        self.slots: List[Optional[RequestSpec]] = [None] * B
         self.slot_pos = np.zeros(B, np.int32)      # next position per slot
         self.slot_tok = np.zeros(B, np.int32)      # last emitted token
-        self.queue: List[Request] = []
-        self.finished: List[Request] = []
+        self.queue: List[RequestSpec] = []
+        self.finished: List[RequestSpec] = []
         self.clock = 0.0                           # abstract engine time
         self.ticks = 0
 
     # -- scheduling --------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: RequestSpec) -> None:
+        if isinstance(req.prompt, (int, np.integer)):
+            raise TypeError(
+                "ServeEngine needs real prompt tokens; scheduling-only "
+                "RequestSpecs (bare int prompt) belong to the gateway's "
+                "planning paths")
         self.queue.append(req)
 
-    def _predicted_finish(self, r: Request) -> float:
+    def _predicted_finish(self, r: RequestSpec) -> float:
         return (self.clock
                 + self.ecfg.prefill_cost_per_tok * r.prompt_len
                 + self.ecfg.decode_cost_per_tok * r.max_new_tokens)
 
-    def _pick(self) -> Optional[Request]:
+    def _pick(self) -> Optional[RequestSpec]:
         ready = [r for r in self.queue if r.arrival <= self.clock]
         if not ready:
             return None
-        pol = self.ecfg.policy
-        if pol == "fcfs":
-            r = min(ready, key=lambda r: (r.arrival, r.rid))
-        elif pol == "eft":
-            r = min(ready, key=lambda r: (self._predicted_finish(r), r.rid))
-        elif pol == "edf":
-            r = min(ready, key=lambda r: (r.deadline if r.deadline is not None
-                                          else float("inf"), r.rid))
-        else:
-            raise ValueError(f"unknown policy {pol!r}")
+        key = self._admission_key
+        r = min(ready, key=lambda r: key(self, r))
         self.queue.remove(r)
         return r
 
@@ -175,11 +253,15 @@ class ServeEngine:
                     self.finished.append(r)
                     self.slots[b] = None
             self.clock += self.ecfg.decode_cost_per_tok
+        elif admitted is None and self.queue:
+            # idle engine, every queued request still in the future: jump
+            # to the next arrival instead of spinning the tick budget away
+            self.clock = min(r.arrival for r in self.queue)
 
         return {"admitted": admitted, "active": len(active),
                 "queued": len(self.queue), "finished": len(self.finished)}
 
-    def run(self, max_ticks: int = 10000) -> List[Request]:
+    def run(self, max_ticks: int = 10000) -> List[RequestSpec]:
         while (self.queue or any(s is not None for s in self.slots)) \
                 and self.ticks < max_ticks:
             self.step()
@@ -187,13 +269,17 @@ class ServeEngine:
 
     # -- metrics ---------------------------------------------------------------------
     def latency_stats(self) -> Dict[str, float]:
-        if not self.finished:
-            return {}
+        """Latency summary over finished requests — always the full key
+        set, zeros (not ``{}``) when nothing has finished, so callers can
+        index unconditionally."""
         lats = [r.finished_at - r.arrival for r in self.finished
                 if r.finished_at is not None]
         waits = [r.admitted_at - r.arrival for r in self.finished
                  if r.admitted_at is not None]
+        if not lats:
+            return {"mean_latency": 0.0, "p95_latency": 0.0,
+                    "mean_wait": 0.0, "n": 0}
         return {"mean_latency": float(np.mean(lats)),
                 "p95_latency": float(np.percentile(lats, 95)),
-                "mean_wait": float(np.mean(waits)),
+                "mean_wait": float(np.mean(waits)) if waits else 0.0,
                 "n": len(lats)}

@@ -154,9 +154,10 @@ def test_vos_non_monotone_value_fn_rejected():
     from repro.core.dag import merge
     wl = ds_workload()
     merged = merge([wl.instance(i) for i in range(3)])
-    with pytest.raises(ValueError, match="non-decreasing"):
-        schedule(merged, paper_pool(), CostModel(), policy="vos",
-                 value_fn=lambda t, f: f)
+    with pytest.warns(DeprecationWarning, match="slow path"):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            schedule(merged, paper_pool(), CostModel(), policy="vos",
+                     value_fn=lambda t, f: f)
 
 
 def test_schedule_assignment_lookup_cached():

@@ -1,4 +1,8 @@
-"""Serving engine: continuous batching correctness + scheduling policies."""
+"""Serving stack: continuous-batching correctness + engine policies
+(ServeEngine) and SLO-aware admission / shedding / preemption / restart
+(ServingGateway), gateway tests sanitize-on via REPRO_SANITIZE=1."""
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -7,9 +11,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.vos import ValueCurve
 from repro.models import model as M
 from repro.models.model import greedy_generate
-from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.engine import (
+    SERVE_POLICIES,
+    EngineConfig,
+    Request,
+    RequestSpec,
+    ServeEngine,
+)
+from repro.serve.gateway import GatewayConfig, ServingGateway, synth_requests
 
 CFG = get_config("qwen3-0.6b", smoke=True)
 
@@ -29,7 +41,7 @@ def _requests(n, seed=0, arrival_gap=0.5):
             prompt=prompt.astype(np.int32),
             max_new_tokens=int(rng.integers(3, 8)),
             arrival=i * arrival_gap,
-            deadline=i * arrival_gap + float(rng.uniform(40, 200)),
+            curve=ValueCurve.step(i * arrival_gap + float(rng.uniform(40, 200))),
         )
         out.append(req)
     return out
@@ -85,3 +97,236 @@ def test_eft_admits_short_jobs_first(params):
     eng2.submit(short_req)
     eng2.step()
     assert eng2.slots[0].rid == 0
+
+
+# -- RequestSpec / policy-registry regressions --------------------------------
+
+
+def test_legacy_deadline_warns_and_maps_to_step_curve():
+    with pytest.warns(DeprecationWarning, match="deadline"):
+        r = Request(rid=0, prompt=8, max_new_tokens=2, deadline=7.5)
+    assert r.curve == ValueCurve.step(7.5)
+    assert r.hard_deadline == 7.5
+    # an explicit curve wins; no curve means no deadline
+    with pytest.warns(DeprecationWarning):
+        r2 = Request(
+            rid=1, prompt=8, max_new_tokens=2, deadline=7.5, curve=ValueCurve.step(3.0)
+        )
+    assert r2.hard_deadline == 3.0
+    assert RequestSpec(rid=2, prompt=8, max_new_tokens=2).hard_deadline == float("inf")
+
+
+def test_request_rejects_unknown_tier():
+    with pytest.raises(ValueError, match="unknown tier"):
+        RequestSpec(rid=0, prompt=8, max_new_tokens=2, tier="gold")
+
+
+def test_unknown_policy_rejected_at_engine_construction():
+    # fails before any model state is touched, so params=None is fine
+    with pytest.raises(ValueError, match="unknown policy"):
+        ServeEngine(CFG, None, EngineConfig(policy="lifo"))
+
+
+def test_edf_key_orders_none_deadlines_last_with_rid_tiebreak():
+    specs = [
+        RequestSpec(rid=3, prompt=4, max_new_tokens=1),
+        RequestSpec(rid=1, prompt=4, max_new_tokens=1),
+        RequestSpec(rid=2, prompt=4, max_new_tokens=1, curve=ValueCurve.step(9.0)),
+        RequestSpec(rid=0, prompt=4, max_new_tokens=1, curve=ValueCurve.step(5.0)),
+    ]
+    key = SERVE_POLICIES["edf"]
+    order = [r.rid for r in sorted(specs, key=lambda r: key(None, r))]
+    assert order == [0, 2, 1, 3]
+
+
+def test_edf_engine_admits_dated_before_undated(params):
+    eng = ServeEngine(CFG, params, EngineConfig(max_batch=1, max_seq=64, policy="edf"))
+    prompt = np.arange(2, 8, dtype=np.int32)
+    eng.submit(RequestSpec(rid=2, prompt=prompt, max_new_tokens=2))
+    eng.submit(RequestSpec(rid=0, prompt=prompt, max_new_tokens=2))
+    eng.submit(
+        RequestSpec(rid=1, prompt=prompt, max_new_tokens=2, curve=ValueCurve.step(50.0))
+    )
+    done = eng.run()
+    assert len(done) == 3
+    admitted = [r.rid for r in sorted(done, key=lambda r: r.admitted_at)]
+    # the dated request first, then the undated ones in rid order
+    assert admitted == [1, 0, 2]
+
+
+def test_engine_rejects_scheduling_only_prompts(params):
+    eng = ServeEngine(CFG, params, EngineConfig(max_batch=1, max_seq=64))
+    with pytest.raises(TypeError, match="real prompt tokens"):
+        eng.submit(RequestSpec(rid=0, prompt=32, max_new_tokens=2))
+
+
+def test_idle_clock_jump_and_empty_latency_stats(params):
+    eng = ServeEngine(CFG, params, EngineConfig(max_batch=1, max_seq=64, policy="fcfs"))
+    assert eng.latency_stats() == {
+        "mean_latency": 0.0,
+        "p95_latency": 0.0,
+        "mean_wait": 0.0,
+        "n": 0,
+    }
+    prompt = np.arange(2, 8, dtype=np.int32)
+    eng.submit(RequestSpec(rid=0, prompt=prompt, max_new_tokens=2, arrival=5.0))
+    eng.step()
+    # idle engine with only future arrivals jumps to the next arrival
+    # instead of spinning the tick budget away
+    assert eng.clock == 5.0
+    done = eng.run()
+    assert len(done) == 1
+    assert eng.latency_stats()["n"] == 1
+
+
+# -- ServingGateway -----------------------------------------------------------
+
+
+@pytest.fixture
+def sanitized(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+
+def _gw_cfg(max_batch=1, **kw):
+    ecfg = EngineConfig(
+        max_batch=max_batch, prefill_cost_per_tok=1e-3, decode_cost_per_tok=0.05
+    )
+    defaults = dict(ecfg=ecfg, window_s=1.0, shed_backlog_s=0.0, preempt=False)
+    defaults.update(kw)
+    return GatewayConfig(**defaults)
+
+
+def _spec(rid, arrival, tier, dec=20):
+    return RequestSpec(
+        rid=rid, prompt=32, max_new_tokens=dec, arrival=arrival, tier=tier
+    )
+
+
+def test_gateway_tier_floors_order_admission(sanitized):
+    """Same-instant arrivals admit in tier-value order: the floor-ordered
+    gate is the tiered admission control (no gateway-side queueing)."""
+    gw = ServingGateway(_gw_cfg())
+    gw.offer(_spec(0, 0.0, "best_effort"))
+    gw.offer(_spec(1, 0.0, "batch"))
+    gw.offer(_spec(2, 0.0, "interactive"))
+    gw.drain()
+    prefills = [a.task for a in gw.drv.eng.assignments if a.task.startswith("prefill#")]
+    assert prefills == ["prefill#2", "prefill#1", "prefill#0"]
+    rep = gw.report()
+    assert rep.n_completed == 3 and rep.n_shed == 0
+
+
+def test_gateway_sheds_lowest_value_first(sanitized):
+    """Overload at a window boundary sheds best-effort before batch and
+    never interactive."""
+    gw = ServingGateway(_gw_cfg(shed_backlog_s=2.0))
+    for i in range(8):  # ~8.3s booked onto one slot in window 0
+        gw.offer(_spec(i, 0.0, "batch"))
+    for rid, tier in [
+        (8, "best_effort"),
+        (9, "best_effort"),
+        (10, "batch"),
+        (11, "batch"),
+        (12, "interactive"),
+    ]:
+        gw.offer(_spec(rid, 1.5, tier))
+    gw.drain()
+    rep = gw.report()
+    per = rep.per_tier
+    assert rep.n_shed > 0
+    assert per["interactive"]["shed"] == 0
+    assert per["interactive"]["completed"] == 1
+    # both pending best-effort requests go before any batch work does
+    assert per["best_effort"]["shed"] == 2
+    assert rep.n_completed + rep.n_shed == 13
+
+
+def test_gateway_interactive_preempts_best_effort(sanitized):
+    gw = ServingGateway(_gw_cfg(preempt=True, preempt_backlog_s=3.0))
+    gw.offer(_spec(0, 0.0, "best_effort", dec=200))  # ~10s each on one slot
+    gw.offer(_spec(1, 0.0, "best_effort", dec=200))
+    gw.offer(_spec(2, 1.5, "interactive"))  # probes into the deep backlog
+    gw.drain()
+    assert gw.drv.n_preemptions == 1
+    pre = gw.drv.preemptions[0]
+    assert pre.victim is not None
+    victim_rid = int(pre.victim.split("#", 1)[1])
+    assert gw.specs[victim_rid].tier == "best_effort"
+    rep = gw.report()
+    assert rep.n_preemptions == 1
+    assert rep.n_completed == 3  # displaced work resumes and finishes
+
+
+def test_gateway_restart_matches_uninterrupted(sanitized):
+    """Snapshot at a mid-trace window boundary, restore from the durable
+    record, finish the trace: byte-identical schedule and report."""
+    ecfg = EngineConfig(
+        max_batch=2, prefill_cost_per_tok=2e-4, decode_cost_per_tok=0.02
+    )
+    gcfg = GatewayConfig(
+        ecfg=ecfg,
+        window_s=2.0,
+        shed_backlog_s=3.0,
+        preempt_backlog_s=2.0,
+        max_preempt_probes_per_window=4,
+    )
+    specs = synth_requests(150, seed=3, mean_gap=0.3)
+    full = ServingGateway(gcfg)
+    rep_full = full.run(specs)
+    assert rep_full.n_completed + rep_full.n_shed == len(specs)
+    assert 0.0 < rep_full.goodput <= 1.0
+    w = [int(s.arrival // gcfg.window_s) for s in specs]
+    bounds = [i for i in range(1, len(specs)) if w[i] > w[i - 1]]
+    assert bounds, "trace must span multiple arrival windows"
+    k = bounds[len(bounds) // 2]
+    gw1 = ServingGateway(gcfg)
+    for s in specs[:k]:
+        gw1.offer(s)
+    snap = gw1.snapshot()
+    gw2 = ServingGateway.restore(snap, gcfg=gcfg)
+    for s in specs[k:]:
+        gw2.offer(s)
+    gw2.drain()
+    rep_split = gw2.report()
+    assert rep_split.digest == rep_full.digest
+    a = dataclasses.asdict(rep_full)
+    b = dataclasses.asdict(rep_split)
+    for key in ("wall_seconds", "n_events"):  # telemetry, not the record
+        a.pop(key)
+        b.pop(key)
+    assert a == b
+
+
+def test_gateway_offer_validation(sanitized):
+    gw = ServingGateway(_gw_cfg())
+    gw.offer(_spec(0, 1.0, "batch"))
+    with pytest.raises(ValueError, match="nondecreasing"):
+        gw.offer(_spec(1, 0.5, "batch"))
+    with pytest.raises(ValueError, match="duplicate"):
+        gw.offer(_spec(0, 1.5, "batch"))
+
+
+def test_gateway_serve_replays_plan_on_engine(params, sanitized):
+    """End-to-end bridge: plan with the gateway, execute on the
+    continuous-batching engine with real prompt tokens."""
+    rng = np.random.default_rng(7)
+    gw = ServingGateway(_gw_cfg(max_batch=2))
+    tiers = ["interactive", "batch", "best_effort", "batch"]
+    for i, tier in enumerate(tiers):
+        prompt = rng.integers(2, CFG.vocab_size, size=6).astype(np.int32)
+        gw.offer(
+            RequestSpec(
+                rid=i, prompt=prompt, max_new_tokens=3, arrival=0.4 * i, tier=tier
+            )
+        )
+    gw.drain()
+    rep = gw.report()
+    assert rep.n_completed == 4
+    eng = ServeEngine(CFG, params, EngineConfig(policy="fcfs", max_batch=2, max_seq=64))
+    stats = gw.serve(eng)
+    assert stats["n"] == rep.n_completed
+    for r in eng.finished:
+        assert len(r.output) == r.max_new_tokens + 1
+    eft = EngineConfig(policy="eft", max_batch=2, max_seq=64)
+    with pytest.raises(ValueError, match="fcfs"):
+        gw.serve(ServeEngine(CFG, params, eft))

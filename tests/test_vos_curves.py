@@ -406,7 +406,8 @@ def test_value_fn_accepts_a_curve_as_default():
     pool = paper_pool(n_arm=2, n_xeon=2)
     merged = merge([wl.instance(i) for i in range(4)], name="x4")
     c = ValueCurve.linear_decay(40.0, 160.0)
-    via_value_fn = schedule(merged, pool, CostModel(), policy="vos", value_fn=c)
+    with pytest.warns(DeprecationWarning, match="default_curve"):
+        via_value_fn = schedule(merged, pool, CostModel(), policy="vos", value_fn=c)
     via_default = schedule(merged, pool, CostModel(), policy="vos", default_curve=c)
     ref = schedule_reference(merged, pool, CostModel(), policy="vos", default_curve=c)
     assert _tuples(via_value_fn) == _tuples(via_default) == _tuples(ref)
@@ -421,10 +422,76 @@ def test_submit_curve_requires_vos_policy():
 def test_non_monotone_custom_value_fn_still_rejected():
     wl = ds_workload()
     merged = merge([wl.instance(i) for i in range(3)], name="x3")
-    with pytest.raises(ValueError, match="non-decreasing"):
-        schedule(
-            merged, paper_pool(), CostModel(), policy="vos", value_fn=lambda t, f: f
-        )
+
+    def bad(t, f):
+        return f
+
+    with pytest.warns(DeprecationWarning, match="slow path"):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            schedule(merged, paper_pool(), CostModel(), policy="vos", value_fn=bad)
+
+
+def test_normalize_curves_accepts_every_spelling():
+    from repro.core.vos import normalize_curves
+
+    c0, c1 = ValueCurve.step(5.0), ValueCurve.step(9.0)
+    assert normalize_curves(None) is None
+    assert normalize_curves({"0": c0, "7": c1}) == {"0": c0, "7": c1}
+    assert normalize_curves([c0, c1]) == {"0": c0, "1": c1}
+    assert normalize_curves(lambda i: (c0, c1)[i % 2], n_instances=3) == {
+        "0": c0,
+        "1": c1,
+        "2": c0,
+    }
+    with pytest.raises(TypeError, match="default_curve"):
+        normalize_curves(c0)  # a lone curve is not a collection
+    with pytest.raises(TypeError, match="instance count"):
+        normalize_curves(lambda i: c0)  # callable needs n_instances
+
+
+def test_tier_ladder_orders_value_and_deadlines():
+    from repro.core.vos import TIERS, tier_curve, tier_mix
+
+    unit = 2.0
+    ci, cb, ce = (tier_curve(t, unit) for t in TIERS)
+    assert ci.value(0.0) > cb.value(0.0) > ce.value(0.0)
+    assert ci.hard_deadline() == 4.0 * unit
+    assert cb.hard_deadline() == 32.0 * unit
+    assert ce.hard_deadline() == math.inf  # best-effort never expires
+    mix = tier_mix(10, unit)
+    assert set(mix) == {str(i) for i in range(10)}
+    counts = {t: 0 for t in TIERS}
+    for c in mix.values():
+        for t in TIERS:
+            if c == tier_curve(t, unit):
+                counts[t] += 1
+    assert counts == {"interactive": 2, "batch": 5, "best_effort": 3}
+    with pytest.raises(ValueError, match="unknown tier"):
+        tier_curve("gold")
+
+
+def test_curves_spelling_unified_across_run_entry_points():
+    """run_instances and run_online take the same curves= spellings
+    (sequence == mapping) and produce identical vos schedules."""
+    from repro.core.online import run_online
+
+    wl = ds_workload()
+    pool = paper_pool()
+    seq = [
+        ValueCurve.step(60.0),
+        ValueCurve.linear_decay(30.0, 120.0),
+        ValueCurve.constant(0.5),
+    ]
+    as_map = {str(i): c for i, c in enumerate(seq)}
+    r_seq = run_instances(
+        wl, pool, CostModel(), policy="vos", n_instances=3, curves=seq
+    )
+    r_map = run_instances(
+        wl, pool, CostModel(), policy="vos", n_instances=3, curves=as_map
+    )
+    assert _tuples(r_seq.schedule) == _tuples(r_map.schedule)
+    r_onl = run_online(wl, pool, CostModel(), policy="vos", n_instances=3, curves=seq)
+    assert _tuples(r_onl.schedule) == _tuples(r_seq.schedule)
 
 
 def test_slo_curves_completes_the_durable_record():
@@ -498,7 +565,10 @@ def test_as_value_fn_is_the_slow_path_of_the_same_curve():
     merged = merge([wl.instance(i) for i in range(5)], name="x5")
     c = ValueCurve.linear_decay(30.0, 120.0)
     fast = schedule(merged, pool, CostModel(), policy="vos", default_curve=c)
-    slow = schedule(merged, pool, CostModel(), policy="vos", value_fn=c.as_value_fn())
+    with pytest.warns(DeprecationWarning, match="slow path"):
+        slow = schedule(
+            merged, pool, CostModel(), policy="vos", value_fn=c.as_value_fn()
+        )
     assert _tuples(fast) == _tuples(slow)
 
 
